@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks.
+
+CPU container: wall-times are interpret-mode/oracle timings (the Pallas
+kernels target TPU); the meaningful numbers here are the *roofline
+estimates* computed from kernel arithmetic (MXU flops, VMEM traffic) for
+the TPU target, plus oracle wall-times as a regression canary."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from .common import csv_line, dump
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> dict:
+    out = {}
+    key = jax.random.PRNGKey(0)
+    print("kernel          M/B   K/S   N/hd  oracle_us  tpu_est_us  bound")
+    for (M, K, N) in [(256, 512, 512), (1024, 1024, 1024),
+                      (128, 4096, 4096)]:
+        k1, k2 = jax.random.split(key)
+        qx = jax.random.randint(k1, (M, K), -127, 128, dtype=jnp.int8)
+        qw = jax.random.randint(k2, (K, N), -127, 128, dtype=jnp.int8)
+        sw = jnp.full((N,), 0.01, jnp.float32)
+        us = _time(lambda a, b: ref.imc_mvm_ref(a, b, jnp.float32(0.1), sw),
+                   qx, qw)
+        flops = 2.0 * M * K * N
+        bytes_ = M * K + K * N + 4 * M * N
+        t_c = flops / PEAK_FLOPS * 1e6
+        t_m = bytes_ / HBM_BW * 1e6
+        bound = "compute" if t_c > t_m else "memory"
+        est = max(t_c, t_m)
+        name = f"imc_mvm.{M}x{K}x{N}"
+        print(f"imc_mvm    {M:6d} {K:5d} {N:5d} {us:10.1f} {est:11.2f}"
+              f"  {bound}")
+        csv_line(name, us, f"tpu_est={est:.2f}us,{bound}-bound")
+        out[name] = {"oracle_us": us, "tpu_est_us": est, "bound": bound}
+
+    for (B, H, S, hd) in [(2, 8, 1024, 128), (1, 8, 4096, 128)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+        us = _time(lambda a, b, c: ref.flash_attention_ref(a, b, c), q, k, v)
+        flops = 4.0 * B * H * S * S * hd
+        bytes_ = 2 * (3 * B * H * S * hd + B * H * S * hd)
+        t_c = flops / PEAK_FLOPS * 1e6
+        t_m = bytes_ / HBM_BW * 1e6
+        est = max(t_c, t_m)
+        bound = "compute" if t_c > t_m else "memory"
+        name = f"flash.{B}x{H}x{S}x{hd}"
+        print(f"flash      {B:3d}x{H}  {S:5d} {hd:5d} {us:10.1f} {est:11.2f}"
+              f"  {bound}")
+        csv_line(name, us, f"tpu_est={est:.2f}us,{bound}-bound")
+        out[name] = {"oracle_us": us, "tpu_est_us": est, "bound": bound}
+
+    path = dump("kernel_bench", out)
+    print(f"artifact: {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness entry point: one experiment per paper table/figure,
+plus beyond-paper studies.  ``python -m benchmarks.run [names...]``
+
+Prints ``CSV,name,us_per_call,derived`` lines for machine consumption and
+writes JSON artifacts under artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (elastic_bench, fig2_resnet8, fig3_resnet18, fig4_imc_dpu,
+                   kernel_bench, lm_partition, scheduler_quality,
+                   sensitivity, table1_utilization, yolo_latency)
+
+    suites = {
+        "fig2": fig2_resnet8.main,
+        "fig3": fig3_resnet18.main,
+        "table1": table1_utilization.main,
+        "fig4": fig4_imc_dpu.main,
+        "yolo": yolo_latency.main,
+        "quality": scheduler_quality.main,
+        "kernels": kernel_bench.main,
+        "elastic": elastic_bench.main,
+        "sensitivity": sensitivity.main,
+        "partition": lm_partition.main,
+    }
+    want = sys.argv[1:] or list(suites)
+    t0 = time.time()
+    for name in want:
+        if name not in suites:
+            print(f"unknown suite '{name}'; have {sorted(suites)}")
+            continue
+        print(f"\n######## {name} ########")
+        t1 = time.time()
+        suites[name]()
+        print(f"[{name} done in {time.time()-t1:.1f}s]")
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter decoder LM for a few
+hundred steps on the synthetic pipeline, with checkpointing, resume, and
+gradient-compression stats (deliverable b, training kind).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--resume]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import Segment, ShapeSpec
+from repro.optim import adamw
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def make_100m_config():
+    """~100M params: stablelm-family geometry scaled down."""
+    base = get_config("stablelm-1.6b")
+    return dataclasses.replace(
+        base,
+        name="stablelm-100m",
+        d_model=640,
+        n_heads=10,
+        n_kv_heads=10,
+        head_dim=64,
+        d_ff=1792,
+        vocab=32768,
+        segments=(Segment("attn", 12),),
+        microbatch=8,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    from repro.models.lm.transformer import param_count
+    print(f"model: {cfg.name}, {param_count(cfg)/1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+
+    shape = ShapeSpec("example", args.seq, args.batch, "train")
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        ckpt_every=50,
+        ckpt_dir=args.ckpt_dir,
+        log_every=20,
+        opt=adamw.AdamWConfig(lr=3e-4, warmup_steps=30,
+                              total_steps=args.steps),
+    )
+    report = train(cfg, shape, loop)
+    first = sum(report.losses[:10]) / max(len(report.losses[:10]), 1)
+    last = sum(report.losses[-10:]) / max(len(report.losses[-10:]), 1)
+    print(f"\nsteps={report.steps_run} resumed_from={report.resumed_from}")
+    print(f"loss: first10={first:.4f} -> last10={last:.4f} "
+          f"({report.wall_seconds:.1f}s)")
+    assert last < first, "training did not reduce loss"
+    print("OK: loss decreased on the synthetic stream")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""repro.core — the paper's contribution: node-to-PU scheduling for
+hybrid in-memory-computing inference engines, plus the IMCE simulator.
+"""
+
+from .cost import (
+    CostModel,
+    HardwareProfile,
+    IMCE_DEFAULT,
+    IMCE_FAST_LINK,
+    PUSpec,
+    make_pus,
+)
+from .graph import Graph, GraphError, Node, OpKind, PUType
+from .metrics import NormalizedPoint, normalize, utilization_table
+from .schedulers import (
+    Assignment,
+    ScheduleError,
+    Scheduler,
+    available,
+    get_scheduler,
+)
+from .simulator import IMCESimulator, SimResult
+
+__all__ = [
+    "CostModel",
+    "HardwareProfile",
+    "IMCE_DEFAULT",
+    "IMCE_FAST_LINK",
+    "PUSpec",
+    "make_pus",
+    "Graph",
+    "GraphError",
+    "Node",
+    "OpKind",
+    "PUType",
+    "NormalizedPoint",
+    "normalize",
+    "utilization_table",
+    "Assignment",
+    "ScheduleError",
+    "Scheduler",
+    "available",
+    "get_scheduler",
+    "IMCESimulator",
+    "SimResult",
+]

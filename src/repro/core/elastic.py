@@ -1,0 +1,81 @@
+"""Elastic rescheduling: PU failure -> LBLP re-placement on survivors.
+
+This is the paper's algorithm doing fleet-management duty: because LBLP
+is fast (O(V log V + V*P)) and deterministic, the CDA can re-run it on
+the surviving PU set the moment a PU drops, and reconfigure.  The same
+policy drives the LM tier's stage re-partitioning when a device group is
+lost (core.pipeline_partition).
+
+``ElasticSession`` tracks the live fleet, produces assignments, and
+reports the degradation curve (rate/latency after each failure) — see
+benchmarks/elastic_bench.py and examples/elastic_reschedule.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cost import CostModel, PUSpec
+from .graph import Graph
+from .schedulers import Assignment, get_scheduler
+from .simulator import IMCESimulator, SimResult
+
+
+@dataclass
+class ElasticEvent:
+    failed_pu: Optional[int]
+    n_pus: int
+    rate: float
+    latency: float
+    mapping: Dict[int, int]
+
+
+class ElasticSession:
+    """Maintains a live node->PU mapping under PU failures."""
+
+    def __init__(self, graph: Graph, pus: Sequence[PUSpec],
+                 algorithm: str = "lblp",
+                 cost_model: Optional[CostModel] = None) -> None:
+        self.g = graph
+        self.cm = cost_model or CostModel()
+        self.algorithm = algorithm
+        self.live: List[PUSpec] = list(pus)
+        self.history: List[ElasticEvent] = []
+        self._schedule(None)
+
+    # -- internals -------------------------------------------------------
+    def _schedule(self, failed: Optional[int]) -> None:
+        if not self.live:
+            raise RuntimeError("no surviving PUs")
+        sched = get_scheduler(self.algorithm, self.cm)
+        self.assignment: Assignment = sched.schedule(self.g, self.live)
+        sim = IMCESimulator(self.g, self.cm)
+        res: SimResult = sim.run(self.assignment, frames=64)
+        self.history.append(ElasticEvent(
+            failed_pu=failed,
+            n_pus=len(self.live),
+            rate=res.rate,
+            latency=res.latency,
+            mapping=dict(self.assignment.mapping),
+        ))
+
+    # -- public API ------------------------------------------------------
+    def fail(self, pu_id: int) -> ElasticEvent:
+        """A PU died: reschedule everything it was running."""
+        before = len(self.live)
+        self.live = [p for p in self.live if p.pu_id != pu_id]
+        if len(self.live) == before:
+            raise KeyError(f"PU {pu_id} not in live set")
+        # feasibility: at least one PU of each required type must survive
+        self._schedule(failed=pu_id)
+        return self.history[-1]
+
+    def join(self, pu: PUSpec) -> ElasticEvent:
+        """A PU (re)joined the fleet: scale back up."""
+        self.live.append(pu)
+        self._schedule(failed=None)
+        return self.history[-1]
+
+    def degradation_curve(self) -> List[Tuple[int, float, float]]:
+        return [(e.n_pus, e.rate, e.latency) for e in self.history]

@@ -1,0 +1,347 @@
+"""DAG intermediate representation for neural-network deployment graphs.
+
+This is the paper's object of study: a CNN (or any DNN) is a directed
+acyclic graph of *nodes* (fused operator groups, e.g. ``Conv+ReLU``) that
+must be mapped onto a set of processing units.  The scheduler tier
+(``repro.core.schedulers``) consumes this IR; the simulator
+(``repro.core.simulator``) executes mappings over it.
+
+Design notes
+------------
+* Node ids are 1-based integers to match the paper's Table I convention.
+* ``OpKind`` distinguishes the functional class of every node; the *PU
+  compatibility* of a node is derived from its kind (conv/MVM -> IMC,
+  everything else -> DPU) exactly as described in §IV of the paper, but can
+  be overridden per-node (``Node.pu_type``) for what-if studies.
+* Longest path / levels / ancestor queries are pre-computed lazily and
+  cached; all algorithms here are O(V+E) except ancestor bitsets which are
+  O(V*E/64) — trivial for the paper's graphs (<= 233 nodes).
+"""
+
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class PUType(enum.Enum):
+    """Processing-unit class of the hybrid IMC device (paper §III)."""
+
+    IMC = "imc"
+    DPU = "dpu"
+
+
+class OpKind(enum.Enum):
+    """Functional class of a graph node.
+
+    ``CONV``/``MVM`` are the in-memory-computable kinds; the rest are
+    digital ops served by DPUs (paper §IV, first paragraph).
+    Activations (ReLU/SiLU) are *fused* into their producer conv/MVM, as
+    in the IMCE PUs ("optionally followed by activation functions").
+    """
+
+    CONV = "conv"
+    MVM = "mvm"                 # fully-connected / matmul
+    ADD = "add"
+    MUL = "mul"
+    POOL_MAX = "pool_max"
+    POOL_AVG = "pool_avg"
+    GLOBAL_POOL = "global_pool"
+    CONCAT = "concat"
+    SPLIT = "split"
+    RESHAPE = "reshape"
+    UPSAMPLE = "upsample"
+    SOFTMAX = "softmax"
+    ACT = "act"                 # standalone activation (not fused)
+    INPUT = "input"
+    OUTPUT = "output"
+    # LM-tier kinds (used by core.pipeline_partition over transformer DAGs)
+    ATTENTION = "attention"
+    MOE = "moe"
+    RECURRENT = "recurrent"
+    EMBED = "embed"
+    NORM = "norm"
+
+
+#: op kinds that the IMC PUs execute natively (weight-stationary MVM class).
+IMC_KINDS = frozenset(
+    {OpKind.CONV, OpKind.MVM, OpKind.ATTENTION, OpKind.MOE, OpKind.EMBED}
+)
+
+#: zero-cost structural kinds (graph glue; the IMCE runtime folds these).
+FREE_KINDS = frozenset({OpKind.INPUT, OpKind.OUTPUT})
+
+
+def default_pu_type(kind: OpKind) -> PUType:
+    """Paper §IV: conv/MVM -> IMC, every other function -> DPU."""
+    return PUType.IMC if kind in IMC_KINDS else PUType.DPU
+
+
+@dataclass
+class Node:
+    """One deployable node of the network graph.
+
+    Attributes
+    ----------
+    node_id:   1-based unique id (paper Table I numbering).
+    name:      human-readable name (e.g. ``layer2.0.conv1+relu``).
+    kind:      functional class; determines PU compatibility.
+    flops:     MAC-equivalent floating/fixed op count of the node.
+    weight_bytes: stationary parameter footprint (INT8 bytes) — the IMC
+               crossbar area the node occupies (paper Table I "Weights
+               Area").  Zero for DPU ops.
+    out_bytes: activation bytes forwarded to consumers (INT8).
+    out_elems: number of output elements (drives DPU cost).
+    pu_type:   which PU class executes this node (derived from kind unless
+               overridden).
+    fused_act: activation fused into this node ("relu"/"silu"/None).
+    meta:      free-form dict (shapes, layer indices, ...).
+    """
+
+    node_id: int
+    name: str
+    kind: OpKind
+    flops: float = 0.0
+    weight_bytes: float = 0.0
+    out_bytes: float = 0.0
+    out_elems: float = 0.0
+    pu_type: Optional[PUType] = None
+    fused_act: Optional[str] = None
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.pu_type is None:
+            self.pu_type = default_pu_type(self.kind)
+
+    def is_free(self) -> bool:
+        return self.kind in FREE_KINDS
+
+
+class GraphError(ValueError):
+    pass
+
+
+class Graph:
+    """A DNN deployment DAG.
+
+    Edges carry the producer's activation bytes (compute-and-forward
+    transfers go over shared DRAM / ICI between PUs).
+    """
+
+    def __init__(self, name: str = "graph") -> None:
+        self.name = name
+        self.nodes: Dict[int, Node] = {}
+        self._succ: Dict[int, List[int]] = {}
+        self._pred: Dict[int, List[int]] = {}
+        self._topo_cache: Optional[List[int]] = None
+        self._anc_cache: Optional[Dict[int, int]] = None  # id -> bitmask
+
+    # -- construction ----------------------------------------------------
+    def add_node(self, node: Node) -> Node:
+        if node.node_id in self.nodes:
+            raise GraphError(f"duplicate node id {node.node_id}")
+        self.nodes[node.node_id] = node
+        self._succ[node.node_id] = []
+        self._pred[node.node_id] = []
+        self._invalidate()
+        return node
+
+    def add(self, name: str, kind: OpKind, *, deps: Sequence[int] = (), **kw) -> Node:
+        """Convenience: create node with the next free id and wire deps."""
+        nid = (max(self.nodes) + 1) if self.nodes else 1
+        node = Node(node_id=nid, name=name, kind=kind, **kw)
+        self.add_node(node)
+        for d in deps:
+            self.add_edge(d, nid)
+        return node
+
+    def add_edge(self, src: int, dst: int) -> None:
+        if src not in self.nodes or dst not in self.nodes:
+            raise GraphError(f"edge ({src},{dst}) references unknown node")
+        if dst not in self._succ[src]:
+            self._succ[src].append(dst)
+            self._pred[dst].append(src)
+        self._invalidate()
+
+    def _invalidate(self) -> None:
+        self._topo_cache = None
+        self._anc_cache = None
+
+    # -- queries ----------------------------------------------------------
+    def successors(self, nid: int) -> List[int]:
+        return list(self._succ[nid])
+
+    def predecessors(self, nid: int) -> List[int]:
+        return list(self._pred[nid])
+
+    def edges(self) -> Iterable[Tuple[int, int]]:
+        for s, ds in self._succ.items():
+            for d in ds:
+                yield (s, d)
+
+    def sources(self) -> List[int]:
+        return [n for n in self.nodes if not self._pred[n]]
+
+    def sinks(self) -> List[int]:
+        return [n for n in self.nodes if not self._succ[n]]
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def num_nodes(self, kind: Optional[OpKind] = None,
+                  pu_type: Optional[PUType] = None) -> int:
+        out = 0
+        for n in self.nodes.values():
+            if kind is not None and n.kind != kind:
+                continue
+            if pu_type is not None and n.pu_type != pu_type:
+                continue
+            out += 1
+        return out
+
+    def total_weight_bytes(self) -> float:
+        return sum(n.weight_bytes for n in self.nodes.values())
+
+    # -- algorithms ---------------------------------------------------------
+    def topo_order(self) -> List[int]:
+        """Kahn topological order (stable: ready set kept sorted by id)."""
+        if self._topo_cache is not None:
+            return list(self._topo_cache)
+        indeg = {n: len(self._pred[n]) for n in self.nodes}
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        order: List[int] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            inserted = False
+            for s in self._succ[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+                    inserted = True
+            if inserted:
+                ready.sort()
+        if len(order) != len(self.nodes):
+            raise GraphError("graph has a cycle")
+        self._topo_cache = order
+        return list(order)
+
+    def longest_path(self, time_of: Callable[[Node], float]) -> List[int]:
+        """Maximum-total-``time_of`` source->sink path (paper Alg. 1 step 1).
+
+        Classic DAG dynamic program over the topological order.  Node
+        weights only (edge transfer times are handled by the simulator,
+        matching the paper which defines the LP over node execution
+        times).
+        """
+        order = self.topo_order()
+        best: Dict[int, float] = {}
+        back: Dict[int, Optional[int]] = {}
+        for nid in order:
+            node = self.nodes[nid]
+            t = time_of(node)
+            preds = self._pred[nid]
+            if preds:
+                p = max(preds, key=lambda q: best[q])
+                best[nid] = best[p] + t
+                back[nid] = p
+            else:
+                best[nid] = t
+                back[nid] = None
+        end = max(best, key=lambda q: best[q])
+        path: List[int] = []
+        cur: Optional[int] = end
+        while cur is not None:
+            path.append(cur)
+            cur = back[cur]
+        return path[::-1]
+
+    def critical_time(self, time_of: Callable[[Node], float]) -> float:
+        path = self.longest_path(time_of)
+        return sum(time_of(self.nodes[n]) for n in path)
+
+    # ancestor bitsets: parallel-branch tests --------------------------------
+    def _ancestors(self) -> Dict[int, int]:
+        if self._anc_cache is not None:
+            return self._anc_cache
+        idx = {nid: i for i, nid in enumerate(sorted(self.nodes))}
+        anc: Dict[int, int] = {n: 0 for n in self.nodes}
+        for nid in self.topo_order():
+            m = 0
+            for p in self._pred[nid]:
+                m |= anc[p] | (1 << idx[p])
+            anc[nid] = m
+        self._anc_cache = anc
+        self._anc_idx = idx
+        return anc
+
+    def is_parallel(self, a: int, b: int) -> bool:
+        """True iff neither node is an ancestor of the other (parallel
+        branches in the sense of the paper's branch constraint)."""
+        if a == b:
+            return False
+        anc = self._ancestors()
+        ia, ib = self._anc_idx[a], self._anc_idx[b]
+        return not (anc[b] >> ia) & 1 and not (anc[a] >> ib) & 1
+
+    def depth_levels(self) -> Dict[int, int]:
+        """ASAP level of every node (hop count, used by RR tie-breaks)."""
+        lvl: Dict[int, int] = {}
+        for nid in self.topo_order():
+            preds = self._pred[nid]
+            lvl[nid] = 1 + max((lvl[p] for p in preds), default=-1)
+        return lvl
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "name": self.name,
+                "nodes": [
+                    {
+                        "id": n.node_id,
+                        "name": n.name,
+                        "kind": n.kind.value,
+                        "flops": n.flops,
+                        "weight_bytes": n.weight_bytes,
+                        "out_bytes": n.out_bytes,
+                        "out_elems": n.out_elems,
+                        "pu_type": n.pu_type.value,
+                        "fused_act": n.fused_act,
+                    }
+                    for n in self.nodes.values()
+                ],
+                "edges": list(self.edges()),
+            },
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "Graph":
+        raw = json.loads(text)
+        g = cls(raw["name"])
+        for nd in raw["nodes"]:
+            g.add_node(
+                Node(
+                    node_id=nd["id"],
+                    name=nd["name"],
+                    kind=OpKind(nd["kind"]),
+                    flops=nd["flops"],
+                    weight_bytes=nd["weight_bytes"],
+                    out_bytes=nd["out_bytes"],
+                    out_elems=nd["out_elems"],
+                    pu_type=PUType(nd["pu_type"]),
+                    fused_act=nd.get("fused_act"),
+                )
+            )
+        for s, d in raw["edges"]:
+            g.add_edge(s, d)
+        return g
+
+    def validate(self) -> None:
+        self.topo_order()  # raises on cycle
+        for nid, node in self.nodes.items():
+            if node.node_id != nid:
+                raise GraphError(f"node key {nid} != node_id {node.node_id}")

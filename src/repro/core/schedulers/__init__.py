@@ -1,0 +1,70 @@
+"""Scheduler registry.
+
+Paper algorithms: lblp (Alg. 1), wb (Alg. 2), rr, rd (§IV).
+Beyond-paper:     heft, cpop ([12], related work), optimal (B&B bound),
+                  lblp-x (our improved variant).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from ..cost import CostModel
+from .base import Assignment, ScheduleError, Scheduler
+from .lblp import LBLPScheduler
+from .rd import RDScheduler
+from .rr import RRScheduler
+from .wb import WBScheduler
+
+_REGISTRY: Dict[str, Callable[..., Scheduler]] = {
+    "lblp": LBLPScheduler,
+    "wb": WBScheduler,
+    "rr": RRScheduler,
+    "rd": RDScheduler,
+}
+
+
+def register(name: str, factory: Callable[..., Scheduler]) -> None:
+    _REGISTRY[name] = factory
+
+
+def get_scheduler(name: str, cost_model: Optional[CostModel] = None,
+                  **kw) -> Scheduler:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scheduler '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](cost_model, **kw)
+
+
+def available() -> list:
+    return sorted(_REGISTRY)
+
+
+# Late registrations (importable lazily to keep base deps minimal).
+def _register_extras() -> None:
+    from .heft import CPOPScheduler, HEFTScheduler
+    from .lblp_x import LBLPXScheduler
+    from .optimal import OptimalScheduler
+
+    register("heft", HEFTScheduler)
+    register("cpop", CPOPScheduler)
+    register("optimal", OptimalScheduler)
+    register("lblp-x", LBLPXScheduler)
+
+
+try:  # extras are part of the library; guard only against partial checkouts
+    _register_extras()
+except ImportError:  # pragma: no cover
+    pass
+
+__all__ = [
+    "Assignment",
+    "ScheduleError",
+    "Scheduler",
+    "LBLPScheduler",
+    "WBScheduler",
+    "RRScheduler",
+    "RDScheduler",
+    "get_scheduler",
+    "register",
+    "available",
+]

@@ -1,0 +1,123 @@
+"""Scheduler API: node-to-PU assignment production and validation.
+
+A *schedule* here is purely the static mapping the paper studies
+(``Assignment``: node_id -> pu_id).  Temporal behaviour (rate, latency,
+utilization) is derived by ``repro.core.simulator`` from the mapping.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from ..cost import CostModel, PUSpec
+from ..graph import Graph, Node, OpKind, PUType
+
+
+class ScheduleError(ValueError):
+    pass
+
+
+@dataclass
+class Assignment:
+    """A node->PU mapping plus the context it was produced for."""
+
+    mapping: Dict[int, int]                  # node_id -> pu_id
+    pus: List[PUSpec]
+    algorithm: str = "unknown"
+    meta: dict = field(default_factory=dict)
+
+    def pu_of(self, node_id: int) -> int:
+        return self.mapping[node_id]
+
+    def nodes_on(self, pu_id: int) -> List[int]:
+        return sorted(n for n, p in self.mapping.items() if p == pu_id)
+
+    def pu_by_id(self, pu_id: int) -> PUSpec:
+        for p in self.pus:
+            if p.pu_id == pu_id:
+                return p
+        raise KeyError(pu_id)
+
+    # -- static per-PU aggregates ------------------------------------------
+    def load(self, g: Graph, cm: CostModel) -> Dict[int, float]:
+        """Total assigned execution time per PU (the paper's load)."""
+        out = {p.pu_id: 0.0 for p in self.pus}
+        for nid, pid in self.mapping.items():
+            pu = self.pu_by_id(pid)
+            out[pid] += cm.time(g.nodes[nid], pu.pu_type, pu.speed)
+        return out
+
+    def weights(self, g: Graph) -> Dict[int, float]:
+        out = {p.pu_id: 0.0 for p in self.pus}
+        for nid, pid in self.mapping.items():
+            out[pid] += g.nodes[nid].weight_bytes
+        return out
+
+    def bottleneck(self, g: Graph, cm: CostModel) -> float:
+        """max per-PU load == steady-state pipeline interval (1/rate)."""
+        return max(self.load(g, cm).values())
+
+    def validate(self, g: Graph, cm: CostModel,
+                 check_capacity: bool = True) -> None:
+        """Raise unless the mapping is executable on the fleet."""
+        unmapped = set(g.nodes) - set(self.mapping)
+        unmapped = {n for n in unmapped if not g.nodes[n].is_free()}
+        if unmapped:
+            raise ScheduleError(f"unmapped nodes: {sorted(unmapped)}")
+        for nid, pid in self.mapping.items():
+            node = g.nodes[nid]
+            pu = self.pu_by_id(pid)
+            if math.isinf(cm.time(node, pu.pu_type, pu.speed)):
+                raise ScheduleError(
+                    f"node {nid} ({node.kind.value}) not executable on "
+                    f"{pu.pu_type.value} PU {pid}"
+                )
+        if check_capacity:
+            caps = {p.pu_id: p.capacity(cm.profile) for p in self.pus}
+            for pid, w in self.weights(g).items():
+                if w > caps[pid] * (1 + 1e-9):
+                    raise ScheduleError(
+                        f"PU {pid} weight capacity exceeded: {w:.0f} > {caps[pid]:.0f}"
+                    )
+
+
+class Scheduler:
+    """Base class.  Subclasses implement :meth:`schedule`."""
+
+    name = "base"
+
+    def __init__(self, cost_model: Optional[CostModel] = None) -> None:
+        self.cm = cost_model or CostModel()
+
+    def schedule(self, g: Graph, pus: Sequence[PUSpec]) -> Assignment:
+        raise NotImplementedError
+
+    # -- shared helpers -------------------------------------------------------
+    def _compatible(self, node: Node, pus: Sequence[PUSpec]) -> List[PUSpec]:
+        """PUs that can execute ``node`` at finite cost, preferring the
+        node's native type when any exist (paper's placement policy)."""
+        native = [p for p in pus if p.pu_type == node.pu_type]
+        if native:
+            return native
+        return [
+            p for p in pus
+            if not math.isinf(self.cm.time(node, p.pu_type, p.speed))
+        ]
+
+    def _fits(self, node: Node, pu: PUSpec, assigned_weights: Mapping[int, float]) -> bool:
+        cap = pu.capacity(self.cm.profile)
+        return assigned_weights.get(pu.pu_id, 0.0) + node.weight_bytes <= cap * (1 + 1e-9)
+
+
+def split_fleet(pus: Sequence[PUSpec]) -> Dict[PUType, List[PUSpec]]:
+    out: Dict[PUType, List[PUSpec]] = {PUType.IMC: [], PUType.DPU: []}
+    for p in pus:
+        out[p.pu_type].append(p)
+    return out
+
+
+def schedulable_nodes(g: Graph) -> List[Node]:
+    """All nodes that need a PU (drops free INPUT/OUTPUT glue)."""
+    return [n for n in g.nodes.values() if not n.is_free()]

@@ -1,0 +1,94 @@
+"""Load-Balance Longest-Path (LBLP) — the paper's Algorithm 1.
+
+Steps (verbatim from the paper):
+
+  1. Identify the Longest Path (LP): the sequence of nodes forming the
+     path with the highest total execution time.
+  2. For each processing type (IMC/DPU), sort the LP nodes in descending
+     order of execution time.
+  3. Assign each LP node to the compatible PU with the smallest total
+     assigned execution time; update that PU's total.
+  4. Repeat step 3 for the non-LP nodes (also sorted descending), while
+     enforcing the parallel-branch constraint: nodes on parallel branches
+     are assigned, if possible, to *different* PUs (maximizes pipeline
+     parallelism).
+
+Our implementation additionally respects the IMC weight-capacity
+constraint (Table I normalizes per-PU "weights area" to 100%, implying a
+hard capacity): a PU whose crossbars cannot hold the node's weights is
+skipped; if no compatible PU fits, capacity is waived for that node (the
+emulator spills to DRAM) and the event is recorded in ``meta``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from ..cost import PUSpec
+from ..graph import Graph, Node, PUType
+from .base import Assignment, Scheduler, schedulable_nodes
+
+
+class LBLPScheduler(Scheduler):
+    name = "lblp"
+
+    def __init__(self, cost_model=None, branch_constraint: bool = True) -> None:
+        super().__init__(cost_model)
+        self.branch_constraint = branch_constraint
+
+    def schedule(self, g: Graph, pus: Sequence[PUSpec]) -> Assignment:
+        cm = self.cm
+        mapping: Dict[int, int] = {}
+        load: Dict[int, float] = {p.pu_id: 0.0 for p in pus}
+        weights: Dict[int, float] = {p.pu_id: 0.0 for p in pus}
+        spills: List[int] = []
+
+        # Step 1: longest path by execution time (on native PU type).
+        lp = g.longest_path(lambda n: cm.time(n))
+        lp_set = set(lp)
+
+        def assign(node: Node, candidates: List[PUSpec]) -> None:
+            """Min-load greedy with capacity + optional branch separation."""
+            pool = [p for p in candidates if self._fits(node, p, weights)]
+            if not pool:
+                pool = list(candidates)  # capacity waiver (spill)
+                spills.append(node.node_id)
+            if self.branch_constraint:
+                # prefer PUs holding no node parallel to this one
+                free = [
+                    p for p in pool
+                    if not any(
+                        g.is_parallel(node.node_id, other)
+                        for other, pid in mapping.items()
+                        if pid == p.pu_id
+                    )
+                ]
+                if free:
+                    pool = free
+            best = min(pool, key=lambda p: (load[p.pu_id], p.pu_id))
+            mapping[node.node_id] = best.pu_id
+            load[best.pu_id] += cm.time(node, best.pu_type, best.speed)
+            weights[best.pu_id] += node.weight_bytes
+
+        # Steps 2-3: LP nodes, per type, descending execution time.
+        lp_nodes = [g.nodes[n] for n in lp if not g.nodes[n].is_free()]
+        for pu_type in (PUType.IMC, PUType.DPU):
+            batch = [n for n in lp_nodes if n.pu_type == pu_type]
+            batch.sort(key=lambda n: (-cm.time(n), n.node_id))
+            for node in batch:
+                assign(node, self._compatible(node, pus))
+
+        # Step 4: non-LP nodes, same procedure (+ branch constraint).
+        rest = [n for n in schedulable_nodes(g) if n.node_id not in lp_set]
+        for pu_type in (PUType.IMC, PUType.DPU):
+            batch = [n for n in rest if n.pu_type == pu_type]
+            batch.sort(key=lambda n: (-cm.time(n), n.node_id))
+            for node in batch:
+                assign(node, self._compatible(node, pus))
+
+        return Assignment(
+            mapping=mapping,
+            pus=list(pus),
+            algorithm=self.name,
+            meta={"longest_path": lp, "capacity_spills": spills},
+        )

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: INT8 direct convolution (weight-stationary).
+
+TPU-native adaptation of the paper's IMC conv nodes: the (K, K, Cin, bn)
+filter block stays resident in VMEM (the crossbar analogue) while the
+kernel sweeps the batch grid; the conv is computed as an unrolled
+K x K tap accumulation of MXU matmuls over the full spatial map:
+
+    out[i, j, co] = sum_{di, dj}  x[i*s+di, j*s+dj, :] @ w[di, dj, :, co]
+
+Accumulation is INT32 (exact), with fused per-channel requantization in
+the epilogue — bit-compatible with ``repro.models.quant.quantized_conv2d``.
+
+Scope: SAME padding, stride 1/2, spatial maps that fit VMEM as one block
+(the paper's CIFAR-scale workloads; 34x34x512 int8 = 0.6 MB).  Larger
+maps (YOLO 640x640 early layers) use the jnp oracle / XLA conv — see
+ops.py dispatch.
+
+Grid: (B, Cout/bn); x block (1, Hp, Wp, Cin); w block (K, K, Cin, bn).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, *,
+                 ksize: int, stride: int, h_out: int, w_out: int):
+    x = x_ref[0].astype(jnp.int32)             # (Hp, Wp, Cin)
+    acc = jnp.zeros((h_out * w_out, o_ref.shape[-1]), jnp.int32)
+    for di in range(ksize):
+        for dj in range(ksize):
+            tap = jax.lax.slice(
+                x,
+                (di, dj, 0),
+                (di + stride * (h_out - 1) + 1,
+                 dj + stride * (w_out - 1) + 1,
+                 x.shape[-1]),
+                (stride, stride, 1),
+            )                                   # (h_out, w_out, Cin)
+            tap2d = tap.reshape(h_out * w_out, x.shape[-1])
+            w_tap = w_ref[di, dj].astype(jnp.int32)   # (Cin, bn)
+            acc += jax.lax.dot_general(
+                tap2d, w_tap, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * sx_ref[0, 0] * sw_ref[0, :] + b_ref[0, :]
+    o_ref[...] = y.reshape(1, h_out, w_out, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "bn", "interpret"))
+def imc_conv2d(qx: jnp.ndarray, qw: jnp.ndarray, sx: jnp.ndarray,
+               sw: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+               *, stride: int = 1, bn: int = 128,
+               interpret: bool = False) -> jnp.ndarray:
+    """INT8 conv: x (B, H, W, Cin) int8, w (K, K, Cin, Cout) int8,
+    SAME padding -> (B, H/s, W/s, Cout) f32."""
+    B, H, W, Cin = qx.shape
+    K, K2, Cin2, Cout = qw.shape
+    assert K == K2 and Cin == Cin2
+    h_out = -(-H // stride)
+    w_out = -(-W // stride)
+    # SAME padding (matches XLA for odd kernels)
+    pad_h = max((h_out - 1) * stride + K - H, 0)
+    pad_w = max((w_out - 1) * stride + K - W, 0)
+    xp = jnp.pad(qx, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                      (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    bn_ = min(bn, Cout)
+    rem = Cout % bn_
+    wp = qw if rem == 0 else jnp.pad(qw, ((0, 0), (0, 0), (0, 0),
+                                          (0, bn_ - rem)))
+    swp = sw if rem == 0 else jnp.pad(sw, (0, bn_ - rem))
+    bias = bias if bias is not None else jnp.zeros((Cout,), jnp.float32)
+    bp = bias if rem == 0 else jnp.pad(bias, (0, bn_ - rem))
+    Np = wp.shape[-1]
+    Hp, Wp = xp.shape[1], xp.shape[2]
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, ksize=K, stride=stride,
+                          h_out=h_out, w_out=w_out),
+        grid=(B, Np // bn_),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cin), lambda b, n: (b, 0, 0, 0)),
+            pl.BlockSpec((K, K, Cin, bn_), lambda b, n: (0, 0, 0, n)),
+            pl.BlockSpec((1, 1), lambda b, n: (0, 0)),
+            pl.BlockSpec((1, bn_), lambda b, n: (0, n)),
+            pl.BlockSpec((1, bn_), lambda b, n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, bn_),
+                               lambda b, n: (b, 0, 0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, h_out, w_out, Np), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, jnp.asarray(sx, jnp.float32).reshape(1, 1),
+      swp.reshape(1, -1).astype(jnp.float32), bp.reshape(1, -1))
+    return out[..., :Cout]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: flash attention (online-softmax, O(S) memory).
+
+The LM-tier hot-spot.  Standard two-pass-free formulation: grid
+(B*H, Sq/bq, Sk/bk) with the K axis innermost; running max/denominator/
+accumulator live in VMEM scratch and the output tile is written in the
+epilogue of the last K block.  Supports causal masking, sliding-window
+(local) masking and gemma-style logit softcapping — the exact variants
+the assigned architectures need.
+
+q/k/v: (B, H, S, hd); blocks default (bq, bk) = (128, 128), hd padded to
+the lane width by the caller if needed.  Validated in interpret mode
+against ``ref.flash_attention_ref`` over shape/window/softcap sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], bq: int, bk: int, n_k: int,
+                  s_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)            # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    d = q_pos - k_pos
+    ok = k_pos < s_valid          # padded keys never win the softmax
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom)[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """(B, H, S, hd) -> (B, H, S, hd) f32."""
+    B, H, S, hd = q.shape
+    bq_, bk_ = min(bq, S), min(bk, S)
+    pad = (-S) % bq_
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        qp = q
+    padk = (-S) % bk_
+    if padk:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, padk), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, padk), (0, 0)))
+    else:
+        kp, vp = k, v
+    Sq, Sk = qp.shape[2], kp.shape[2]
+    n_k = Sk // bk_
+    bh = B * H
+    qp = qp.reshape(bh, Sq, hd)
+    kp = kp.reshape(bh, Sk, hd)
+    vp = vp.reshape(bh, Sk, hd)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+            window=window, softcap=softcap, bq=bq_, bk=bk_, n_k=n_k,
+            s_valid=S),
+        grid=(bh, Sq // bq_, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(B, H, Sq, hd)[:, :, :S, :]

@@ -1,0 +1,48 @@
+"""jit'd public wrappers around the Pallas kernels, with CPU dispatch.
+
+On TPU the pallas kernels run natively; on CPU (this container, tests,
+examples) they execute in interpret mode or fall back to the bit-exact
+jnp oracle, so every caller can use one API everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .conv2d import imc_conv2d
+from .flash_attention import flash_attention
+from .imc_mvm import imc_mvm
+
+#: spatial maps larger than this use the XLA conv (see conv2d.py scope)
+_CONV_KERNEL_MAX_HW = 64
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantized_matmul(qx, qw, sx, sw, bias=None, *, interpret=None):
+    """INT8 (M,K)x(K,N) -> f32, fused requant (IMC crossbar analogue)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return imc_mvm(qx, qw, sx, sw, bias, interpret=interpret)
+
+
+def quantized_conv2d(qx, qw, sx, sw, bias=None, *, stride=1, interpret=None):
+    """INT8 NHWC conv, SAME padding, fused requant."""
+    if max(qx.shape[1], qx.shape[2]) > _CONV_KERNEL_MAX_HW:
+        return ref.conv2d_ref(qx, qw, sx, sw, bias, stride=stride)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return imc_conv2d(qx, qw, sx, sw, bias, stride=stride,
+                      interpret=interpret)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              interpret=None):
+    """Flash attention (B,H,S,hd) -> (B,H,S,hd) f32."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=interpret)

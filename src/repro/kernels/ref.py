@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact integer paths,
+float-tolerance flash paths).  Tests assert kernels == these references
+across shape/dtype sweeps in interpret mode."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def imc_mvm_ref(qx: jnp.ndarray, qw: jnp.ndarray, sx: jnp.ndarray,
+                sw: jnp.ndarray, bias: Optional[jnp.ndarray] = None
+                ) -> jnp.ndarray:
+    """INT8 x INT8 -> INT32 -> requantized f32 (matches models.quant)."""
+    acc = jax.lax.dot_general(
+        qx.astype(jnp.int32), qw.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) \
+        * sw.astype(jnp.float32)[None, :]
+    if bias is not None:
+        y = y + bias[None, :]
+    return y
+
+
+def conv2d_ref(qx: jnp.ndarray, qw: jnp.ndarray, sx: jnp.ndarray,
+               sw: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+               stride: int = 1) -> jnp.ndarray:
+    """INT8 NHWC/HWIO conv, SAME padding, integer accumulate, requant."""
+    acc = jax.lax.conv_general_dilated(
+        qx.astype(jnp.int32), qw.astype(jnp.int32),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * jnp.asarray(sx, jnp.float32) \
+        * sw.astype(jnp.float32)[None, None, None, :]
+    if bias is not None:
+        y = y + bias[None, None, None, :]
+    return y
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """Plain softmax attention; q/k/v (B, H, S, hd); f32 math."""
+    B, H, S, hd = q.shape
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    idx = jnp.arange(S)
+    d = idx[:, None] - idx[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import to materialize the placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (data, model) single pod; 2x16x16 (pod, data, model) for two
+    pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host offers (CPU tests / examples): (1, n_devices)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

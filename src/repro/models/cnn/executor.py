@@ -1,0 +1,87 @@
+"""Graph executor: run a deployment ``Graph`` as a real program.
+
+The scheduler decides *where* nodes run (timing is emulated by the DES);
+numerics are placement-invariant, so the executor walks the DAG in
+topological order and evaluates each node with jnp ops, reading conv/fc
+parameters from the model pytree via ``node.meta["param"]`` paths.
+
+Two arithmetic modes:
+* ``mode="float"`` — float32 reference.
+* ``mode="int8"``  — per-node INT8 quantized execution (per-channel
+  weights, per-tensor activations quantized at every node boundary),
+  matching the paper's INT8 deployment.
+
+Numerics parity with the un-scheduled reference model is asserted in
+tests (float mode: exact; int8 mode: bounded quantization error).
+
+Supported node kinds cover the ResNet graphs (the YOLO 233-node graph is
+scheduled/simulated but executed at module level by ``yolo.forward``; see
+DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph, OpKind
+
+from .. import quant
+from . import layers as L
+
+
+def _param_at(params, path):
+    node = params
+    for p in path:
+        node = node[p]
+    return node
+
+
+def execute(g: Graph, params: Dict, x: jnp.ndarray, mode: str = "float",
+            act_scales: Optional[Dict[str, float]] = None) -> jnp.ndarray:
+    """Run graph ``g`` on batch ``x`` (NHWC).  Returns the sink output."""
+    env: Dict[int, jnp.ndarray] = {}
+    out = None
+    for nid in g.topo_order():
+        node = g.nodes[nid]
+        preds = g.predecessors(nid)
+        ins = [env[p] for p in preds]
+        if node.kind == OpKind.CONV:
+            inp = ins[0] if ins else x
+            p = _param_at(params, node.meta["param"])
+            if mode == "int8":
+                s = (act_scales or {}).get(node.name)
+                y = quant.quantized_conv2d(
+                    inp, p["w"], p["b"], stride=node.meta["stride"],
+                    padding=node.meta["padding"],
+                    x_scale=None if s is None else jnp.float32(s))
+                y = L.activate(y, node.meta.get("act"))
+            else:
+                y = L.conv2d(p, inp, stride=node.meta["stride"],
+                             padding=node.meta["padding"],
+                             act=node.meta.get("act"))
+            env[nid] = y
+        elif node.kind == OpKind.MVM:
+            p = _param_at(params, node.meta["param"])
+            if mode == "int8":
+                y = quant.quantized_matmul(ins[0], p["w"], p["b"])
+            else:
+                y = L.dense(p, ins[0])
+            env[nid] = y
+        elif node.kind == OpKind.ADD:
+            y = ins[0] + ins[1]
+            env[nid] = L.activate(y, node.meta.get("act"))
+        elif node.kind == OpKind.GLOBAL_POOL:
+            env[nid] = L.global_avg_pool(ins[0])
+        elif node.kind == OpKind.INPUT:
+            env[nid] = x
+        elif node.kind == OpKind.OUTPUT:
+            env[nid] = ins[0]
+        else:
+            raise NotImplementedError(
+                f"executor does not implement {node.kind} (node {node.name}); "
+                "ResNet-family graphs only — see module docstring")
+        out = env[nid]
+    return out

@@ -1,0 +1,100 @@
+"""Executable ResNet8 / ResNet18-CIFAR (the paper's §V.A/§V.B workloads).
+
+* **ResNet8** — the MLPerf-Tiny CIFAR-10 ResNet: stem conv(16) + three
+  stages of one basic block each (16/32/64, stride 1/2/2, 1x1 downsample
+  convs in stages 2-3) + GAP + fc.  9 convs + 1 fc = the paper's "14 nodes
+  total, 10 of which are convolutional"; ~78K parameters.
+
+* **ResNet18-CIFAR** — standard ResNet18 with 3x3 stem (no maxpool) and
+  width halved to (32,64,128,256) so the total is 2.79M ~ the paper's
+  "2.8M parameters"; 20 convs + 1 fc + 8 adds + 1 GAP = 30 nodes, and the
+  topological numbering of IMC nodes reproduces the paper's Table I id
+  set exactly (checked in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+RESNET8 = {
+    "name": "resnet8",
+    "stem_width": 16,
+    "stage_widths": (16, 32, 64),
+    "blocks_per_stage": (1, 1, 1),
+    "num_classes": 10,
+    "image_hw": (32, 32),
+}
+
+RESNET18_CIFAR = {
+    "name": "resnet18_cifar",
+    "stem_width": 32,
+    "stage_widths": (32, 64, 128, 256),
+    "blocks_per_stage": (2, 2, 2, 2),
+    "num_classes": 10,
+    "image_hw": (32, 32),
+}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: dict) -> Dict:
+    """Parameter pytree mirroring the block structure."""
+    keys = iter(jax.random.split(key, 64))
+    params: Dict = {"stem": L.conv_init(next(keys), 3, 3, cfg["stem_width"])}
+    cin = cfg["stem_width"]
+    stages = []
+    for si, (width, nblocks) in enumerate(
+        zip(cfg["stage_widths"], cfg["blocks_per_stage"])
+    ):
+        blocks = []
+        for bi in range(nblocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            block = {
+                "conv1": L.conv_init(next(keys), 3, cin, width),
+                "conv2": L.conv_init(next(keys), 3, width, width),
+            }
+            if stride != 1 or cin != width:
+                block["down"] = L.conv_init(next(keys), 1, cin, width)
+            blocks.append(block)
+            cin = width
+        stages.append(blocks)
+    params["stages"] = stages
+    params["fc"] = L.dense_init(next(keys), cin, cfg["num_classes"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict, x: jnp.ndarray, cfg: dict) -> jnp.ndarray:
+    """NHWC image batch -> logits."""
+    x = L.conv2d(params["stem"], x, stride=1, act="relu")
+    for si, blocks in enumerate(params["stages"]):
+        for bi, block in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            identity = x
+            y = L.conv2d(block["conv1"], x, stride=stride, act="relu")
+            y = L.conv2d(block["conv2"], y, stride=1, act=None)
+            if "down" in block:
+                identity = L.conv2d(block["down"], identity, stride=stride,
+                                    act=None)
+            x = jax.nn.relu(y + identity)
+    x = L.global_avg_pool(x)
+    return L.dense(params["fc"], x)
+
+
+def num_params(cfg: dict) -> int:
+    return L.count_params(init(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,269 @@
+"""Grouped-query attention with the variants the assigned archs need:
+
+* GQA / MQA / MHA (``n_kv_heads`` divides ``n_heads``)
+* causal masking; sliding-window (local) masking with a *dynamic* window
+  so one scan body serves mixed local/global stacks (gemma2/gemma3)
+* attention-logit softcapping (gemma2)
+* cross-attention (whisper decoder)
+* prefill (full sequence) and single-token decode against a KV cache
+
+Shapes: hidden (B, S, D); q/k/v (B, S, H, hd); caches (B, S_max, KV, hd).
+Pure jnp — XLA fuses this well and it lowers/shards everywhere; the
+Pallas flash kernel (repro.kernels.flash_attention) is an optional
+drop-in for the TPU hot path (kernels are validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rope
+from .sharding import constrain
+
+
+def _pad_heads(q, k, v):
+    """Zero-pad the head axis to the next multiple of the model-axis size
+    so attention shards by head (perf iteration #8, EXPERIMENTS §Perf).
+
+    Non-divisible head counts (24/12/8/4 on a 16-wide model axis) would
+    otherwise force either full replication of the quadratic attention or
+    sequence-parallelism with per-layer k/v all-gathers (measured 11x the
+    compute term on starcoder2).  Padded q heads see zero k/v and their
+    output is sliced off before wo — numerics are untouched; the cost is
+    (H_pad/H - 1) extra attention FLOPs, strictly cheaper than either
+    alternative at these geometries.  Returns (q, k, v, real_H).
+    """
+    from .sharding import _ACT_MESH
+    mesh = _ACT_MESH.get()
+    H = q.shape[2]
+    if mesh is None:
+        return q, k, v, H
+    m = mesh.shape["model"]
+    if H % m == 0:
+        return q, k, v, H
+    pad = (-H) % m
+    zq = [(0, 0)] * q.ndim
+    zq[2] = (0, pad)
+    return (jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq), H)
+
+
+def _constrain_attn(q, k, v):
+    """Pin attention activation sharding: batch over data, heads over
+    'model' (head counts are pre-padded to divide the axis)."""
+    def spec(mesh, dp):
+        if q.shape[2] % mesh.shape["model"] == 0:
+            return [dp, None, "model", None]
+        return [dp, None, None, None]
+
+    return constrain(q, spec), constrain(k, spec), constrain(v, spec)
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray      # (D, H, hd)
+    wk: jnp.ndarray      # (D, KV, hd)
+    wv: jnp.ndarray      # (D, KV, hd)
+    wo: jnp.ndarray      # (H, hd, D)
+
+
+def init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+         dtype=jnp.bfloat16) -> AttnParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    so = 1.0 / math.sqrt(n_heads * head_dim)
+    return AttnParams(
+        wq=(jax.random.normal(k1, (d_model, n_heads, head_dim)) * s).astype(dtype),
+        wk=(jax.random.normal(k2, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        wv=(jax.random.normal(k3, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        wo=(jax.random.normal(k4, (n_heads, head_dim, d_model)) * so).astype(dtype),
+    )
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating groups."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Additive attention bias (Sq, Sk) from causal + sliding-window rules.
+
+    ``window`` may be a traced scalar (dynamic per-layer window; a huge
+    value means global attention) or None.
+    """
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, dtype=bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           bias: Optional[jnp.ndarray], softcap: Optional[float],
+           scale: float) -> jnp.ndarray:
+    """Core softmax attention; q (B,Sq,H,hd), k/v (B,Sk,H,hd)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if bias is not None:
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+#: sequences at least this long use q-chunked attention (bounded memory)
+CHUNK_THRESHOLD = 8192
+Q_CHUNK = 1024
+
+
+def forward(p: AttnParams, x: jnp.ndarray, positions: jnp.ndarray,
+            *, causal: bool = True, window: Optional[jnp.ndarray] = None,
+            softcap: Optional[float] = None, use_rope: bool = True,
+            kv_from: Optional[jnp.ndarray] = None,
+            chunk_scan: bool = True) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    ``kv_from``: cross-attention source (B, S_enc, D); disables rope/causal
+    on the keys when provided.
+
+    For long sequences (>= CHUNK_THRESHOLD) the query axis is processed in
+    chunks (a statically-unrolled python loop, so dry-run cost analysis
+    stays exact): attention logits never materialize beyond
+    (B, H, Q_CHUNK, S).  This is the jnp analogue of the Pallas flash
+    kernel's outer loop and keeps 32k-prefill within HBM.
+    """
+    B, S, D = x.shape
+    H, hd = p.wq.shape[1], p.wq.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    src = x if kv_from is None else kv_from
+    k = jnp.einsum("bsd,dhk->bshk", src, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", src, p.wv)
+    if use_rope and kv_from is None:
+        cos, sin = rope.rope_angles(positions, hd)
+        q = rope.apply_rope(q, cos, sin)
+        k = rope.apply_rope(k, cos, sin)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    q, k, v, real_h = _pad_heads(q, k, v)
+    q, k, v = _constrain_attn(q, k, v)
+    scale = 1.0 / math.sqrt(hd)
+
+    if kv_from is not None:
+        out = attend(q, k, v, None, softcap, scale)[:, :, :real_h]
+        return jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+
+    if S < CHUNK_THRESHOLD:
+        bias = _mask_bias(positions, positions, causal, window)[None, None]
+        out = attend(q, k, v, bias, softcap, scale)[:, :, :real_h]
+        return jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+
+    # q-chunked path (bounded logits memory)
+    if chunk_scan and S % Q_CHUNK == 0:
+        # sequential chunks via lax.scan: one chunk's logits live at a time
+        n_c = S // Q_CHUNK
+        qs = q.reshape(q.shape[0], n_c, Q_CHUNK, *q.shape[2:])
+        qs = jnp.moveaxis(qs, 1, 0)               # (n_c, B, c, H, hd)
+
+        def chunk(_, inp):
+            i, qc = inp
+            qpos = i * Q_CHUNK + jnp.arange(Q_CHUNK)
+            bias = _mask_bias(qpos, positions, causal, window)[None, None]
+            return None, attend(qc, k, v, bias, softcap, scale)
+
+        _, outs = jax.lax.scan(chunk, None,
+                               (jnp.arange(n_c), qs))
+        out = jnp.moveaxis(outs, 0, 1).reshape(q.shape[0], S, *q.shape[2:])
+        out = out[:, :, :real_h]
+        return jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+    outs = []
+    for i0 in range(0, S, Q_CHUNK):
+        qc = q[:, i0: i0 + Q_CHUNK]
+        bias = _mask_bias(positions[i0: i0 + Q_CHUNK], positions, causal,
+                          window)[None, None]
+        outs.append(attend(qc, k, v, bias, softcap, scale)[:, :, :real_h])
+    out = jnp.concatenate(outs, axis=1)
+    return jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_max, KV, hd)
+    v: jnp.ndarray       # (B, S_max, KV, hd)
+
+
+def init_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, s_max, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill(p: AttnParams, x: jnp.ndarray, positions: jnp.ndarray,
+            s_max: int, *, use_rope: bool = True) -> KVCache:
+    """Compute and store K/V for the prompt (padded to s_max)."""
+    hd = p.wk.shape[2]
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if use_rope:
+        cos, sin = rope.rope_angles(positions, hd)
+        k = rope.apply_rope(k, cos, sin)
+    pad = s_max - k.shape[1]
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return KVCache(k, v)
+
+
+def cross_decode(p: AttnParams, x: jnp.ndarray, cache: KVCache) -> jnp.ndarray:
+    """Cross-attention during decode: static (unpadded) encoder KV cache."""
+    H, hd = p.wq.shape[1], p.wq.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = _expand_kv(cache.k, H)
+    v = _expand_kv(cache.v, H)
+    out = attend(q, k, v, None, None, 1.0 / math.sqrt(hd))
+    return jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+
+
+def decode_step(p: AttnParams, x: jnp.ndarray, cache: KVCache,
+                cur_pos: jnp.ndarray, *, window: Optional[jnp.ndarray] = None,
+                softcap: Optional[float] = None, use_rope: bool = True,
+                ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode: x (B, 1, D); cur_pos scalar int (tokens so far).
+
+    Updates the cache in place (functionally) at ``cur_pos`` and attends
+    over positions [0, cur_pos] (optionally windowed).
+    """
+    B, _, D = x.shape
+    H, hd = p.wq.shape[1], p.wq.shape[2]
+    S_max = cache.k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if use_rope:
+        cos, sin = rope.rope_angles(cur_pos[None], hd)
+        q = rope.apply_rope(q, cos, sin)
+        k_new = rope.apply_rope(k_new, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, cur_pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, cur_pos, 0, 0))
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    k_pos = jnp.arange(S_max)
+    valid = k_pos <= cur_pos
+    if window is not None:
+        valid &= (cur_pos - k_pos) < window
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None, None, :]
+    out = attend(q, k, v, bias, softcap, 1.0 / math.sqrt(hd))
+    y = jnp.einsum("bqhd,hdk->bqk", out, p.wo)
+    return y, KVCache(k_cache, v_cache)

@@ -1,0 +1,85 @@
+"""MLP blocks: gated (SiLU/GeLU-GLU, llama/gemma-style) and plain
+two-matrix (whisper/GPT-style), plus RMSNorm / LayerNorm."""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GatedMLP(NamedTuple):
+    w_gate: jnp.ndarray   # (D, F)
+    w_up: jnp.ndarray     # (D, F)
+    w_down: jnp.ndarray   # (F, D)
+
+
+class PlainMLP(NamedTuple):
+    w_in: jnp.ndarray     # (D, F)
+    b_in: jnp.ndarray
+    w_out: jnp.ndarray    # (F, D)
+    b_out: jnp.ndarray
+
+
+def init_gated(key, d: int, f: int, dtype=jnp.bfloat16) -> GatedMLP:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return GatedMLP(
+        (jax.random.normal(k1, (d, f)) * s).astype(dtype),
+        (jax.random.normal(k2, (d, f)) * s).astype(dtype),
+        (jax.random.normal(k3, (f, d)) * so).astype(dtype),
+    )
+
+
+def init_plain(key, d: int, f: int, dtype=jnp.bfloat16) -> PlainMLP:
+    k1, k2 = jax.random.split(key)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return PlainMLP(
+        (jax.random.normal(k1, (d, f)) * s).astype(dtype),
+        jnp.zeros((f,), dtype),
+        (jax.random.normal(k2, (f, d)) * so).astype(dtype),
+        jnp.zeros((d,), dtype),
+    )
+
+
+def gated(p: GatedMLP, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = x @ p.w_gate
+    u = x @ p.w_up
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (g * u) @ p.w_down
+
+
+def plain(p: PlainMLP, x: jnp.ndarray, act: str = "gelu") -> jnp.ndarray:
+    h = x @ p.w_in + p.b_in
+    h = jax.nn.gelu(h) if act == "gelu" else jax.nn.relu(h)
+    return h @ p.w_out + p.b_out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)

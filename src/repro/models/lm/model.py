@@ -1,0 +1,269 @@
+"""Model API: loss, train_step (with gradient accumulation), serve steps,
+and per-(arch x shape) input specs for the dry-run.
+
+Everything here is built to be ``jax.jit``-ed with explicit shardings by
+the launcher; no jit happens at import.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.optim import adamw
+
+from . import transformer
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def make_batch_spec(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.bfloat16, jnp.int32
+    if shape.mode == "train":
+        if cfg.is_encdec():
+            dec = max(S // cfg.dec_len_ratio, 8)
+            return {
+                "enc_frames": jax.ShapeDtypeStruct((B, S, cfg.enc_frame_dim), f32),
+                "tokens": jax.ShapeDtypeStruct((B, dec), i32),
+                "labels": jax.ShapeDtypeStruct((B, dec), i32),
+            }
+        if cfg.num_prefix_tokens:
+            text = S - cfg.num_prefix_tokens
+            return {
+                "prefix": jax.ShapeDtypeStruct(
+                    (B, cfg.num_prefix_tokens, cfg.prefix_dim), f32),
+                "tokens": jax.ShapeDtypeStruct((B, text), i32),
+                "labels": jax.ShapeDtypeStruct((B, text), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.mode == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec():
+            dec = max(S // cfg.dec_len_ratio, 8)
+            spec = {
+                "enc_frames": jax.ShapeDtypeStruct((B, S, cfg.enc_frame_dim), f32),
+                "tokens": jax.ShapeDtypeStruct((B, dec), i32),
+            }
+        elif cfg.num_prefix_tokens:
+            spec = {
+                "prefix": jax.ShapeDtypeStruct(
+                    (B, cfg.num_prefix_tokens, cfg.prefix_dim), f32),
+                "tokens": jax.ShapeDtypeStruct(
+                    (B, S - cfg.num_prefix_tokens), i32),
+            }
+        return spec
+    # decode: one new token against an S-long cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def synth_batch(cfg: LMConfig, shape: ShapeSpec, key) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch matching make_batch_spec (smoke tests)."""
+    spec = make_batch_spec(cfg, shape)
+    out = {}
+    for name, sds in spec.items():
+        key, sub = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, sds.shape, 0, cfg.vocab,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, dtype=sds.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: LMConfig, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Mean next-token cross-entropy (f32)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    hidden = transformer.forward_train(
+        cfg, params, tokens,
+        enc_frames=batch.get("enc_frames"),
+        prefix=batch.get("prefix"),
+    )
+    if batch.get("prefix") is not None:
+        hidden = hidden[:, batch["prefix"].shape[1]:, :]
+    logits = transformer.logits_head(cfg, params, hidden)
+    # shift: predict t+1 from t
+    logits = logits[:, :-1]
+    targets = labels[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# train step (microbatched gradient accumulation)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+
+
+def _mesh_axis_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_train_step(cfg: LMConfig, tcfg: Optional[TrainStepConfig] = None,
+                    microbatch: Optional[int] = None, mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    The global batch is split into microbatches scanned sequentially with
+    f32 gradient accumulation (constant memory in global batch size).
+    Microbatches are taken with shard-aligned ``dynamic_slice`` over the
+    batch dim + explicit sharding constraints (``mesh``), so GSPMD keeps
+    every microbatch data-sharded and the remat stash is bounded by the
+    microbatch, not the global batch.
+    """
+    tcfg = tcfg or TrainStepConfig()
+
+    def constrain_batch(b):
+        if mesh is None:
+            return b
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+        def rule(x):
+            spec = [dp] + [None] * (x.ndim - 1)
+            if x.shape[0] % _mesh_axis_size(mesh, dp) != 0:
+                spec[0] = None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+        return jax.tree_util.tree_map(rule, b)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        mb = min(microbatch or cfg.microbatch, B)
+        n_mb = max(B // mb, 1)
+
+        grad_fn = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b))
+
+        if n_mb == 1:
+            # no accumulation loop (also keeps dry-run cost analysis exact)
+            loss, grads = grad_fn(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            def accum(carry, i):
+                gsum, lsum = carry
+                mb_batch = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb,
+                                                           axis=0),
+                    batch)
+                mb_batch = constrain_batch(mb_batch)
+                loss, grads = grad_fn(params, mb_batch)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0),
+                                           jnp.arange(n_mb))
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, gsum)
+            loss = lsum / n_mb
+        new_params, new_opt, metrics = adamw.apply(
+            tcfg.opt, params, opt_state, grads)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: LMConfig, s_max: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(
+            cfg, params, batch["tokens"], s_max,
+            enc_frames=batch.get("enc_frames"),
+            prefix=batch.get("prefix"))
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig):
+    def decode_step(params, token, cache):
+        return transformer.decode(cfg, params, token, cache)
+    return decode_step
+
+
+def init_cache_spec(cfg: LMConfig, shape: ShapeSpec
+                    ) -> transformer.ServeCache:
+    """Abstract ServeCache (ShapeDtypeStructs) for decode-mode dry-runs:
+    the cache a prefill of length seq_len would have produced."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def attn_entry(n):
+        kv = jax.ShapeDtypeStruct((n, B, S, cfg.n_kv_heads, cfg.hd),
+                                  jnp.bfloat16)
+        return transformer.attention.KVCache(kv, kv)
+
+    def ssm_entry(n):
+        return transformer.ssm.SSMState(
+            conv=jax.ShapeDtypeStruct((n, B, cfg.conv_k - 1, cfg.d_inner),
+                                      jnp.bfloat16),
+            h=jax.ShapeDtypeStruct((n, B, cfg.d_inner, cfg.ssm_state),
+                                   jnp.float32))
+
+    def rec_entry(n):
+        return transformer.rglru.RGLRUState(
+            conv=jax.ShapeDtypeStruct((n, B, cfg.conv_k - 1, cfg.d_inner),
+                                      jnp.bfloat16),
+            h=jax.ShapeDtypeStruct((n, B, cfg.d_inner), jnp.float32))
+
+    entries = []
+    for seg in cfg.segments:
+        if seg.kind == "attn":
+            entries.append(attn_entry(seg.n))
+        elif seg.kind == "ssm":
+            entries.append(ssm_entry(seg.n))
+        elif seg.kind == "rec":
+            entries.append(rec_entry(seg.n))
+        elif seg.kind == "hybrid3":
+            entries.append((rec_entry(seg.n), rec_entry(seg.n),
+                            attn_entry(seg.n)))
+        elif seg.kind == "xattn":
+            self_kv = attn_entry(seg.n)
+            cross = transformer.attention.KVCache(
+                jax.ShapeDtypeStruct((seg.n, B, S, cfg.n_kv_heads, cfg.hd),
+                                     jnp.bfloat16),
+                jax.ShapeDtypeStruct((seg.n, B, S, cfg.n_kv_heads, cfg.hd),
+                                     jnp.bfloat16))
+            entries.append((self_kv, cross))
+        else:
+            raise ValueError(seg.kind)
+    return transformer.ServeCache(tuple(entries),
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def abstract_params(cfg: LMConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run)."""
+    return jax.eval_shape(partial(transformer.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: LMConfig):
+    """Optimizer-state ShapeDtypeStructs without allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda key: adamw.init(transformer.init_params(cfg, key)),
+        jax.random.PRNGKey(0))

@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrent block structure (per Griffin):
+  two branches from x:
+    branch 1: linear D->Di, GeLU
+    branch 2: linear D->Di, causal depthwise conv1d (k=4), RG-LRU
+  merge: elementwise product, linear Di->D.
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+  a_t = a^(c * r_t)            with a = sigmoid(Lambda), c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+First-order linear recurrence -> associative scan (TPU-native parallel
+scan; same hardware adaptation as the SSM block).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+class RGLRUParams(NamedTuple):
+    w_x: jnp.ndarray       # (D, Di)  branch-2 input proj
+    w_y: jnp.ndarray       # (D, Di)  branch-1 (gelu gate) proj
+    conv_w: jnp.ndarray    # (K, Di)
+    conv_b: jnp.ndarray    # (Di,)
+    w_r: jnp.ndarray       # (Di, Di) recurrence gate (block-diag in the
+    w_i: jnp.ndarray       # (Di, Di) paper; dense here)
+    lam: jnp.ndarray       # (Di,)    Lambda
+    w_out: jnp.ndarray     # (Di, D)
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray      # (B, K-1, Di)
+    h: jnp.ndarray         # (B, Di) f32
+
+
+def init(key, d: int, d_inner: int, conv_k: int = 4,
+         dtype=jnp.bfloat16) -> RGLRUParams:
+    ks = jax.random.split(key, 6)
+    s, si = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_inner)
+    return RGLRUParams(
+        w_x=(jax.random.normal(ks[0], (d, d_inner)) * s).astype(dtype),
+        w_y=(jax.random.normal(ks[1], (d, d_inner)) * s).astype(dtype),
+        conv_w=(jax.random.normal(ks[2], (conv_k, d_inner)) * 0.2).astype(dtype),
+        conv_b=jnp.zeros((d_inner,), dtype),
+        w_r=(jax.random.normal(ks[3], (d_inner, d_inner)) * si).astype(dtype),
+        w_i=(jax.random.normal(ks[4], (d_inner, d_inner)) * si).astype(dtype),
+        lam=jnp.full((d_inner,), 2.0, jnp.float32),   # sigmoid(2)~0.88
+        w_out=(jax.random.normal(ks[5], (d_inner, d)) * si).astype(dtype),
+    )
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _rglru_scan(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+                lam: jnp.ndarray, h0: jnp.ndarray | None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x/r/i (B,S,Di) -> y (B,S,Di), final h (B,Di)."""
+    a_base = jax.nn.sigmoid(lam)                              # (Di,)
+    log_a = _C * r.astype(jnp.float32) * jnp.log(a_base)      # (B,S,Di)
+    a = jnp.exp(log_a)
+    gated = i.astype(jnp.float32) * x.astype(jnp.float32)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(p, q):
+        ap, up = p
+        aq, uq = q
+        return (ap * aq, uq + aq * up)
+
+    _, hs = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return hs.astype(x.dtype), hs[:, -1]
+
+
+def forward(p: RGLRUParams, x: jnp.ndarray,
+            state: RGLRUState | None = None
+            ) -> Tuple[jnp.ndarray, RGLRUState]:
+    B, S, D = x.shape
+    Di = p.conv_b.shape[0]
+    y_gate = jax.nn.gelu((x @ p.w_y).astype(jnp.float32)).astype(x.dtype)
+    xs = x @ p.w_x
+    if state is not None:
+        ctx = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+        conv_out = _causal_conv(ctx, p.conv_w, p.conv_b)[:, -S:]
+    else:
+        conv_out = _causal_conv(xs, p.conv_w, p.conv_b)
+    r = jax.nn.sigmoid((conv_out @ p.w_r).astype(jnp.float32))
+    i = jax.nn.sigmoid((conv_out @ p.w_i).astype(jnp.float32))
+    h0 = state.h if state is not None else None
+    y, h_last = _rglru_scan(conv_out, r, i, p.lam, h0)
+    out = (y * y_gate) @ p.w_out
+    K = p.conv_w.shape[0]
+    if state is not None:
+        ctx_tail = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    else:
+        ctx_tail = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    return out, RGLRUState(conv=ctx_tail[:, -(K - 1):], h=h_last)
+
+
+def init_state(batch: int, d_inner: int, conv_k: int = 4,
+               dtype=jnp.bfloat16) -> RGLRUState:
+    return RGLRUState(conv=jnp.zeros((batch, conv_k - 1, d_inner), dtype),
+                      h=jnp.zeros((batch, d_inner), jnp.float32))

@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE), decode-aware."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 10_000.0) -> tuple:
+    """(…,) int positions -> (…, head_dim/2) cos/sin tables."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (seq, head_dim/2).
+
+    Rotates pairs (x[2i], x[2i+1]) — the interleaved convention.
+    """
+    half = x.shape[-1] // 2
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    # broadcast cos/sin over head axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

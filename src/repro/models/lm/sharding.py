@@ -1,0 +1,292 @@
+"""Sharding rules: map parameter/activation pytrees to NamedShardings.
+
+Semantic TP rules (Megatron-style):
+* column-parallel producing weights  — attention heads (wq on H, wk/wv on
+  KV), FFN hidden (w_gate/w_up on F), experts (on E);
+* row-parallel consuming weights     — wo (on H), w_down (on F / E);
+* embeddings vocab-sharded (falls back to d_model when vocab doesn't
+  divide the axis);
+* SSM/RG-LRU channel dims (Di) model-sharded (the recurrences are
+  per-channel, so the scan shards cleanly);
+* norms/biases/scalars replicated.
+
+When ``cfg.fsdp`` is set, the largest remaining divisible dim is
+additionally sharded over the data axes (ZeRO-3-style parameter +
+optimizer-state sharding; GSPMD turns the gradient all-reduces into
+reduce-scatters and all-gathers weights just-in-time).
+
+Every emitted spec passes a divisibility guard: an axis that does not
+divide its dim is dropped (replicated) rather than producing an
+unshardable program.  Scan-stacked parameters (under ``segments``) keep
+their leading layer dim unsharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _guard(mesh: Mesh, shape: Tuple[int, ...], spec: Sequence) -> P:
+    """Drop axes that don't divide their dim."""
+    fixed = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            fixed.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep = []
+        size = dim
+        for a in ax:
+            s = mesh.shape[a]
+            if size % s == 0:
+                keep.append(a)
+                size //= s
+        fixed.append(tuple(keep) if len(keep) > 1 else
+                     (keep[0] if keep else None))
+    return P(*fixed)
+
+
+def _with_fsdp(spec: list, shape: Tuple[int, ...], mesh: Mesh,
+               dp_axes, enabled: bool) -> list:
+    """Shard the largest still-unsharded divisible dim over data axes."""
+    if not enabled:
+        return spec
+    dp = _axis_size(mesh, dp_axes)
+    best, best_dim = None, 0
+    for i, (dim, axes) in enumerate(zip(shape, spec)):
+        if axes is None and dim % dp == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is not None:
+        spec = list(spec)
+        spec[best] = dp_axes
+    return spec
+
+
+def param_pspec(cfg: LMConfig, mesh: Mesh, path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    stacked = any(n in ("segments", "enc_segments") for n in names)
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    shape = leaf.shape
+    core = shape[1:] if stacked else shape
+    m = "model"
+
+    def build(spec_core: list, fsdp_dims: bool = True) -> P:
+        spec_core = _with_fsdp(spec_core, core, mesh, dp,
+                               cfg.fsdp and fsdp_dims)
+        spec = ([None] + list(spec_core)) if stacked else list(spec_core)
+        return _guard(mesh, shape, spec)
+
+    # ---- embeddings / heads -------------------------------------------
+    if name == "embed":                       # (V, D)
+        if shape[0] % _axis_size(mesh, m) == 0:
+            return build([m, None])
+        return build([None, m])
+    if name == "lm_head":                     # (D, V)
+        if shape[-1] % _axis_size(mesh, m) == 0:
+            return build([None, m])
+        return build([m, None])
+
+    # ---- attention ------------------------------------------------------
+    if name == "wq":                          # (D, H, hd)
+        return build([None, m, None])
+    if name in ("wk", "wv"):                  # (D, KV, hd)
+        return build([None, m, None])
+    if name == "wo":                          # (H, hd, D)
+        return build([m, None, None])
+
+    # ---- dense FFN ------------------------------------------------------
+    if name in ("w_gate", "w_up"):
+        if len(core) == 3:                    # MoE (E, D, F)
+            if core[0] % _axis_size(mesh, m) == 0:
+                return build([m, None, None])
+            return build([None, None, m])
+        return build([None, m])               # (D, F)
+    if name == "w_down":
+        if len(core) == 3:                    # MoE (E, F, D)
+            if core[0] % _axis_size(mesh, m) == 0:
+                return build([m, None, None])
+            return build([None, m, None])
+        return build([m, None])               # (F, D)
+    if name in ("w_in", "b_in"):              # plain MLP (D, F)/(F,)
+        if len(core) == 2:
+            return build([None, m])
+        return build([m])
+    if name in ("w_out", "b_out"):
+        if name == "w_out" and len(core) == 2:
+            return build([m, None])           # (F|Di, D)
+        return build([None] * len(core), fsdp_dims=False)
+    if name == "w_router":                    # (D, E) — replicated, f32
+        return build([None, None], fsdp_dims=False)
+
+    # ---- SSM / RG-LRU ---------------------------------------------------
+    if name in ("conv_w",):                   # (K, Di)
+        return build([None, m])
+    if name in ("conv_b", "dt_bias", "d_skip", "lam"):
+        return build([m])
+    if name in ("w_dt_down", "w_bc", "a_log", "w_r", "w_i"):  # (Di, *)
+        return build([m, None])
+    if name == "w_dt_up":                     # (R, Di)
+        return build([None, m])
+    if name in ("w_x", "w_y"):                # (D, Di)
+        return build([None, m])
+
+    # ---- norms & everything else: replicated -----------------------------
+    return build([None] * len(core), fsdp_dims=False)
+
+
+def param_shardings(cfg: LMConfig, mesh: Mesh, abstract_params):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(cfg, mesh, path, leaf)),
+        abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return _guard(mesh, shape, [dp] + [None] * (len(shape) - 1))
+
+
+def batch_shardings(mesh: Mesh, batch_spec: Dict[str, jax.ShapeDtypeStruct]):
+    return {k: NamedSharding(mesh, batch_pspec(mesh, v.shape))
+            for k, v in batch_spec.items()}
+
+
+def cache_pspec(mesh: Mesh, path, leaf) -> P:
+    """Stacked cache entries (L, B, S, KV, hd) / states (L, B, ...).
+
+    Preference: batch over data axes; KV heads over model; if KV doesn't
+    divide, shard the sequence dim over model (decode attention reduces
+    over S with collectives); long-context batch-1 shapes shard S over
+    both data and model.
+    """
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    shape = leaf.shape
+    if len(shape) == 5:                     # KV cache (L,B,S,KV,hd)
+        L, B, S, KV, hd = shape
+        spec: list = [None, dp, None, "model", None]
+        if KV % mesh.shape["model"] != 0:
+            spec[3] = None
+            spec[2] = "model"
+        if B < _axis_size(mesh, dp):
+            spec[1] = None
+            # push data axes onto sequence as well
+            cur = spec[2]
+            if cur is None:
+                spec[2] = dp
+            else:
+                spec[2] = tuple(list(dp) + [cur])
+        return _guard(mesh, shape, spec)
+    if len(shape) >= 2:                     # states (L,B,...) / (L,B,Di,N)
+        spec = [None, dp] + [None] * (len(shape) - 2)
+        if len(shape) >= 3 and shape[1] < _axis_size(mesh, dp):
+            spec[1] = None
+            spec[2] = "model" if shape[2] % mesh.shape["model"] == 0 else None
+        return _guard(mesh, shape, spec)
+    return P()
+
+
+def cache_shardings(mesh: Mesh, abstract_cache):
+    def rule(path, leaf):
+        if leaf.shape == ():                # cur_pos scalar
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_pspec(mesh, path, leaf))
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def opt_shardings(cfg: LMConfig, mesh: Mesh, abstract_opt, abstract_params):
+    """m/v mirror the param shardings; step replicated."""
+    pshard = param_shardings(cfg, mesh, abstract_params)
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=NamedSharding(mesh, P()), m=pshard,
+                      v=jax.tree_util.tree_map(lambda s: s, pshard))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# activation-constraint context (set by launchers; no-op on bare CPU)
+# ---------------------------------------------------------------------------
+
+import contextlib as _contextlib
+import contextvars as _contextvars
+
+_ACT_MESH: "_contextvars.ContextVar" = _contextvars.ContextVar(
+    "repro_activation_mesh", default=None)
+
+
+@_contextlib.contextmanager
+def activation_mesh(mesh):
+    """While active, ``constrain`` pins activation shardings to ``mesh``.
+    Launchers (dryrun/train/serve) wrap tracing in this; tests and
+    single-device runs skip it and ``constrain`` is a no-op."""
+    tok = _ACT_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(tok)
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def constrain(x, spec_fn):
+    """Apply with_sharding_constraint if an activation mesh is active.
+
+    ``spec_fn(mesh, dp)`` returns a PartitionSpec-able list for x (use
+    None entries freely); axes that don't divide are dropped by _guard.
+    """
+    mesh = _ACT_MESH.get()
+    if mesh is None or x is None:
+        return x
+    dp = dp_axes(mesh)
+    spec = spec_fn(mesh, dp)
+    guarded = _guard(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, guarded))
+
+
+def constrain_tokens(x):
+    """Residual stream (B, S, D): batch over data axes."""
+    return constrain(x, lambda mesh, dp: [dp] + [None] * (x.ndim - 1))
+
+
+def constrain_moe_slots(x):
+    """MoE dispatch slots (B, E, C, D): batch->data, experts->model."""
+    return constrain(x, lambda mesh, dp: [dp, "model", None, None])

@@ -1,0 +1,159 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b).
+
+Structure per block (Gu & Dao 2023, falcon-mamba variant):
+  in_proj: D -> 2*Di (x, z gate)
+  depthwise causal conv1d (kernel 4) + SiLU on x
+  selective SSM: per-channel state (Di, N); data-dependent dt, B, C:
+     dt = softplus(x @ W_dt_down @ W_dt_up + bias)   (via dt_rank)
+     B, C = x @ W_B, x @ W_C                         (Di -> N each)
+     h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t * x_t
+     y_t = (C_t . h_t) + D_skip * x_t
+  gate: y * silu(z); out_proj: Di -> D
+
+Training/prefill uses an *associative scan* over the sequence (the TPU-
+native adaptation of the paper's CUDA selective-scan kernel: work-
+efficient parallel scan on the VPU instead of a fused SM kernel; see
+DESIGN.md hardware-adaptation).  Decode keeps (conv_state, ssm_state)
+and advances one token at a time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMParams(NamedTuple):
+    w_in: jnp.ndarray        # (D, 2*Di)
+    conv_w: jnp.ndarray      # (K, Di) depthwise
+    conv_b: jnp.ndarray      # (Di,)
+    w_dt_down: jnp.ndarray   # (Di, R)
+    w_dt_up: jnp.ndarray     # (R, Di)
+    dt_bias: jnp.ndarray     # (Di,)
+    w_bc: jnp.ndarray        # (Di, 2*N)
+    a_log: jnp.ndarray       # (Di, N) — A = -exp(a_log)
+    d_skip: jnp.ndarray      # (Di,)
+    w_out: jnp.ndarray       # (Di, D)
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray        # (B, K-1, Di) last inputs
+    h: jnp.ndarray           # (B, Di, N)
+
+
+def init(key, d: int, d_inner: int, n_state: int, dt_rank: int,
+         conv_k: int = 4, dtype=jnp.bfloat16) -> SSMParams:
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(d_inner)
+    return SSMParams(
+        w_in=(jax.random.normal(ks[0], (d, 2 * d_inner)) * s).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (conv_k, d_inner)) * 0.2).astype(dtype),
+        conv_b=jnp.zeros((d_inner,), dtype),
+        w_dt_down=(jax.random.normal(ks[2], (d_inner, dt_rank)) * si).astype(dtype),
+        w_dt_up=(jax.random.normal(ks[3], (dt_rank, d_inner))
+                 * (1.0 / math.sqrt(dt_rank))).astype(dtype),
+        dt_bias=jnp.full((d_inner,), -4.0, dtype),   # softplus(-4) ~ 0.018
+        w_bc=(jax.random.normal(ks[4], (d_inner, 2 * n_state)) * si).astype(dtype),
+        a_log=jnp.log(jnp.tile(jnp.arange(1, n_state + 1, dtype=jnp.float32),
+                               (d_inner, 1))),
+        d_skip=jnp.ones((d_inner,), dtype),
+        w_out=(jax.random.normal(ks[5], (d_inner, d)) * si).astype(dtype),
+    )
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                           ) -> jnp.ndarray:
+    """x (B,S,Di), w (K,Di): causal depthwise conv along S."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_scan(dt: jnp.ndarray, bmat: jnp.ndarray, cmat: jnp.ndarray,
+              xin: jnp.ndarray, a_log: jnp.ndarray,
+              h0: jnp.ndarray | None = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective scan over S via associative scan.
+
+    dt (B,S,Di), bmat/cmat (B,S,N), xin (B,S,Di), a_log (Di,N).
+    Returns y (B,S,Di) and final state (B,Di,N).
+
+    Recurrence per (channel i, state n):
+        h_t = exp(-exp(a_log) * dt_t) * h_{t-1} + dt_t * B_t[n] * x_t
+    which is a first-order linear recurrence  h_t = g_t h_{t-1} + u_t,
+    solved with an associative scan on pairs (g, u).
+    """
+    A = -jnp.exp(a_log.astype(jnp.float32))                      # (Di,N)
+    dt32 = dt.astype(jnp.float32)
+    g = jnp.exp(dt32[..., None] * A)                             # (B,S,Di,N)
+    u = (dt32 * xin.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]                  # (B,S,Di,N)
+    if h0 is not None:
+        # fold the carried state into the first step's u
+        u = u.at[:, 0].add(g[:, 0] * h0.astype(jnp.float32))
+
+    def combine(a, b):
+        ga, ua = a
+        gb, ub = b
+        return (ga * gb, ub + gb * ua)
+
+    gs, hs = jax.lax.associative_scan(combine, (g, u), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    return y.astype(xin.dtype), hs[:, -1]
+
+
+def forward(p: SSMParams, x: jnp.ndarray,
+            state: SSMState | None = None
+            ) -> Tuple[jnp.ndarray, SSMState]:
+    """Full-sequence pass (training/prefill); x (B,S,D)."""
+    B, S, D = x.shape
+    Di = p.conv_b.shape[0]
+    N = p.a_log.shape[1]
+    xz = x @ p.w_in
+    xs, z = xz[..., :Di], xz[..., Di:]
+    if state is not None:
+        ctx = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+        conv_out = _causal_depthwise_conv(ctx, p.conv_w, p.conv_b)[:, -S:]
+    else:
+        conv_out = _causal_depthwise_conv(xs, p.conv_w, p.conv_b)
+    xs = jax.nn.silu(conv_out)
+    dt = jax.nn.softplus(
+        (xs @ p.w_dt_down) @ p.w_dt_up
+        + p.dt_bias.astype(jnp.float32))
+    bc = xs @ p.w_bc
+    bmat, cmat = bc[..., :N], bc[..., N:]
+    h0 = state.h if state is not None else None
+    y, h_last = _ssm_scan(dt, bmat, cmat, xs, p.a_log, h0)
+    y = y + xs * p.d_skip
+    y = y * jax.nn.silu(z)
+    out = y @ p.w_out
+    K = p.conv_w.shape[0]
+    tail_src = xz[..., :Di]
+    if state is not None:
+        ctx_tail = jnp.concatenate([state.conv.astype(tail_src.dtype),
+                                    tail_src], axis=1)
+    else:
+        ctx_tail = jnp.pad(tail_src, ((0, 0), (K - 1, 0), (0, 0)))
+    new_state = SSMState(conv=ctx_tail[:, -(K - 1):], h=h_last)
+    return out, new_state
+
+
+def init_state(batch: int, d_inner: int, n_state: int, conv_k: int = 4,
+               dtype=jnp.bfloat16) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, conv_k - 1, d_inner), dtype),
+        h=jnp.zeros((batch, d_inner, n_state), jnp.float32),
+    )
+
+
+def decode_step(p: SSMParams, x: jnp.ndarray, state: SSMState
+                ) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token decode; x (B,1,D)."""
+    return forward(p, x, state)

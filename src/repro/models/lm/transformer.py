@@ -1,0 +1,501 @@
+"""Scan-based transformer/SSM/hybrid stacks for the assigned archs.
+
+One ``lax.scan`` per config *segment* over stacked layer parameters
+(compile O(1) in depth); per-layer sliding windows ride along as scan xs
+so mixed local/global stacks share one body.  Three execution modes:
+
+* ``forward_train`` — full-sequence, remat'd scan bodies, returns hidden
+  states for the loss head.
+* ``prefill``       — full-sequence, emits per-layer caches (KV / SSM /
+  recurrent states) stacked (L, ...) as scan ys, plus last-position
+  hidden state.
+* ``decode``        — one token against stacked caches (donated).
+
+Whisper (enc-dec) runs a non-causal encoder stack and a decoder stack
+with cross-attention; the conv/mel frontend is stubbed (precomputed frame
+embeddings are the model input, per the assignment).  PaliGemma prepends
+stub image-patch embeddings to the token embeddings.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL_WINDOW, LMConfig, Segment
+
+from . import attention, mlp, moe, rglru, ssm
+from .sharding import constrain_tokens
+
+
+# ---------------------------------------------------------------------------
+# norms (config-selected)
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: LMConfig):
+    if cfg.norm_kind == "ln":
+        return mlp.layernorm_init(cfg.d_model)
+    return mlp.rmsnorm_init(cfg.d_model)
+
+
+def norm_apply(cfg: LMConfig, p, x):
+    if cfg.norm_kind == "ln":
+        return mlp.layernorm(p, x)
+    return mlp.rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# per-layer block params
+# ---------------------------------------------------------------------------
+
+def _ffn_init(cfg: LMConfig, key):
+    if cfg.n_experts:
+        return moe.init(key, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    if cfg.mlp_kind == "plain":
+        return mlp.init_plain(key, cfg.d_model, cfg.d_ff)
+    return mlp.init_gated(key, cfg.d_model, cfg.d_ff)
+
+
+def _ffn_apply(cfg: LMConfig, p, x):
+    if cfg.n_experts:
+        return moe.forward(p, x, cfg.top_k, cfg.capacity_factor, cfg.act)
+    if cfg.mlp_kind == "plain":
+        return mlp.plain(p, x, cfg.act)
+    return mlp.gated(p, x, cfg.act)
+
+
+def init_block(cfg: LMConfig, kind: str, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    if kind == "attn":
+        return {
+            "norm1": norm_init(cfg),
+            "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd),
+            "norm2": norm_init(cfg),
+            "ffn": _ffn_init(cfg, ks[1]),
+        }
+    if kind == "ssm":
+        return {
+            "norm": norm_init(cfg),
+            "ssm": ssm.init(ks[0], cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                            cfg.dt_rank, cfg.conv_k),
+        }
+    if kind == "rec":
+        return {
+            "norm1": norm_init(cfg),
+            "rec": rglru.init(ks[0], cfg.d_model, cfg.d_inner, cfg.conv_k),
+            "norm2": norm_init(cfg),
+            "ffn": _ffn_init(cfg, ks[1]),
+        }
+    if kind == "hybrid3":
+        return {
+            "rec1": init_block(cfg, "rec", ks[0]),
+            "rec2": init_block(cfg, "rec", ks[1]),
+            "attn": init_block(cfg, "attn", ks[2]),
+        }
+    if kind == "xattn":
+        return {
+            "norm1": norm_init(cfg),
+            "self": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd),
+            "norm2": norm_init(cfg),
+            "cross": attention.init(ks[1], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd),
+            "norm3": norm_init(cfg),
+            "ffn": _ffn_init(cfg, ks[2]),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def init_segment(cfg: LMConfig, seg: Segment, key):
+    keys = jax.random.split(key, seg.n)
+    return jax.vmap(lambda k: init_block(cfg, seg.kind, k))(keys)
+
+
+def init_params(cfg: LMConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4 + len(cfg.segments) + len(cfg.enc_segments))
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(jnp.bfloat16),
+        "final_norm": norm_init(cfg),
+        "segments": [init_segment(cfg, seg, ks[4 + i])
+                     for i, seg in enumerate(cfg.segments)],
+    }
+    if cfg.enc_segments:
+        off = 4 + len(cfg.segments)
+        params["enc_segments"] = [init_segment(cfg, seg, ks[off + i])
+                                  for i, seg in enumerate(cfg.enc_segments)]
+        params["enc_final_norm"] = norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab))
+                             * (1.0 / math.sqrt(cfg.d_model))).astype(jnp.bfloat16)
+    return params
+
+
+def param_count(cfg: LMConfig) -> int:
+    shapes = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    return sum(math.prod(x.shape)
+               for x in jax.tree_util.tree_leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_tokens(cfg: LMConfig, params, tokens: jnp.ndarray,
+                 positions: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embed == "sinusoid":
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def logits_head(cfg: LMConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block_fwd(cfg, p, x, positions, window, causal=True,
+                    want_cache=False, s_max=0):
+    x = constrain_tokens(x)
+    h = norm_apply(cfg, p["norm1"], x)
+    a = attention.forward(p["attn"], h, positions, causal=causal,
+                          window=window, softcap=cfg.attn_softcap,
+                          use_rope=(cfg.pos_embed == "rope"),
+                          chunk_scan=cfg.chunk_scan)
+    cache = None
+    if want_cache:
+        # K/V of this layer come from the same normed input the attention
+        # consumed (XLA CSEs the duplicate projections).
+        cache = attention.prefill(p["attn"], h, positions, s_max,
+                                  use_rope=(cfg.pos_embed == "rope"))
+    x = x + a
+    h = norm_apply(cfg, p["norm2"], x)
+    x = x + _ffn_apply(cfg, p["ffn"], h)
+    return x, cache
+
+
+def _ssm_block_fwd(cfg, p, x, state=None):
+    x = constrain_tokens(x)
+    h = norm_apply(cfg, p["norm"], x)
+    y, new_state = ssm.forward(p["ssm"], h, state)
+    return x + y, new_state
+
+
+def _rec_block_fwd(cfg, p, x, state=None):
+    x = constrain_tokens(x)
+    h = norm_apply(cfg, p["norm1"], x)
+    y, new_state = rglru.forward(p["rec"], h, state)
+    x = x + y
+    h = norm_apply(cfg, p["norm2"], x)
+    x = x + _ffn_apply(cfg, p["ffn"], h)
+    return x, new_state
+
+
+def _xattn_block_fwd(cfg, p, x, positions, enc_out, want_cache=False,
+                     s_max=0):
+    x = constrain_tokens(x)
+    h = norm_apply(cfg, p["norm1"], x)
+    a = attention.forward(p["self"], h, positions, causal=True,
+                          use_rope=(cfg.pos_embed == "rope"))
+    self_cache = None
+    if want_cache:
+        self_cache = attention.prefill(p["self"], h, positions, s_max,
+                                       use_rope=(cfg.pos_embed == "rope"))
+    x = x + a
+    h = norm_apply(cfg, p["norm2"], x)
+    c = attention.forward(p["cross"], h, positions, kv_from=enc_out)
+    cross_cache = None
+    if want_cache:
+        cross_cache = attention.prefill(p["cross"], enc_out,
+                                        jnp.arange(enc_out.shape[1]),
+                                        enc_out.shape[1], use_rope=False)
+    x = x + c
+    h = norm_apply(cfg, p["norm3"], x)
+    x = x + _ffn_apply(cfg, p["ffn"], h)
+    if want_cache:
+        return x, (self_cache, cross_cache)
+    return x, None
+
+
+# ---------------------------------------------------------------------------
+# segment scans
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg: LMConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(cfg: LMConfig, body, init, xs):
+    """lax.scan honouring cfg.scan_unroll (full unroll gives exact
+    cost_analysis FLOPs for the roofline; default rolled scan keeps
+    compile O(1) in depth)."""
+    unroll = getattr(cfg, "scan_unroll", False)
+    return jax.lax.scan(body, init, xs, unroll=unroll or 1)
+
+
+def run_segment_train(cfg: LMConfig, seg: Segment, seg_params, x,
+                      positions, enc_out=None, causal=True):
+    windows = jnp.array(seg.windows(), dtype=jnp.int32)
+
+    if seg.kind == "attn":
+        def body(h, inp):
+            p_l, w = inp
+            h, _ = _attn_block_fwd(cfg, p_l, h, positions, w, causal=causal)
+            return h, None
+        x, _ = _scan(cfg, _maybe_remat(cfg, body), x, (seg_params, windows))
+        return x
+    if seg.kind == "ssm":
+        def body(h, p_l):
+            h, _ = _ssm_block_fwd(cfg, p_l, h)
+            return h, None
+        x, _ = _scan(cfg, _maybe_remat(cfg, body), x, seg_params)
+        return x
+    if seg.kind == "rec":
+        def body(h, p_l):
+            h, _ = _rec_block_fwd(cfg, p_l, h)
+            return h, None
+        x, _ = _scan(cfg, _maybe_remat(cfg, body), x, seg_params)
+        return x
+    if seg.kind == "hybrid3":
+        def body(h, inp):
+            p_l, w = inp
+            h, _ = _rec_block_fwd(cfg, p_l["rec1"], h)
+            h, _ = _rec_block_fwd(cfg, p_l["rec2"], h)
+            h, _ = _attn_block_fwd(cfg, p_l["attn"], h, positions, w)
+            return h, None
+        x, _ = _scan(cfg, _maybe_remat(cfg, body), x, (seg_params, windows))
+        return x
+    if seg.kind == "xattn":
+        def body(h, p_l):
+            h, _ = _xattn_block_fwd(cfg, p_l, h, positions, enc_out)
+            return h, None
+        x, _ = _scan(cfg, _maybe_remat(cfg, body), x, seg_params)
+        return x
+    raise ValueError(seg.kind)
+
+
+def encode(cfg: LMConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+    S = frames.shape[1]
+    positions = jnp.arange(S)
+    x = frames.astype(jnp.bfloat16)
+    if cfg.pos_embed == "sinusoid":
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    for seg, seg_params in zip(cfg.enc_segments, params["enc_segments"]):
+        x = run_segment_train(cfg, seg, seg_params, x, positions,
+                              causal=False)
+    return norm_apply(cfg, params["enc_final_norm"], x)
+
+
+def forward_train(cfg: LMConfig, params, tokens: jnp.ndarray,
+                  enc_frames: Optional[jnp.ndarray] = None,
+                  prefix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Returns final hidden states (B, S_total, D)."""
+    B, S = tokens.shape
+    enc_out = None
+    if cfg.is_encdec():
+        enc_out = encode(cfg, params, enc_frames)
+    if prefix is not None:
+        P = prefix.shape[1]
+        positions = jnp.arange(P + S)
+        x_tok = embed_tokens(cfg, params, tokens, positions[P:])
+        x = jnp.concatenate([prefix.astype(x_tok.dtype), x_tok], axis=1)
+    else:
+        positions = jnp.arange(S)
+        x = embed_tokens(cfg, params, tokens, positions)
+    for seg, seg_params in zip(cfg.segments, params["segments"]):
+        x = run_segment_train(cfg, seg, seg_params, x, positions,
+                              enc_out=enc_out)
+    return norm_apply(cfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode against stacked caches
+# ---------------------------------------------------------------------------
+
+class ServeCache(NamedTuple):
+    """Per-segment stacked caches, one entry per config segment."""
+    entries: Tuple[Any, ...]
+    cur_pos: jnp.ndarray           # () int32 — tokens decoded so far
+
+
+def prefill(cfg: LMConfig, params, tokens: jnp.ndarray, s_max: int,
+            enc_frames: Optional[jnp.ndarray] = None,
+            prefix: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, ServeCache]:
+    """Process the prompt; returns (last-position logits, caches)."""
+    B, S = tokens.shape
+    enc_out = None
+    if cfg.is_encdec():
+        enc_out = encode(cfg, params, enc_frames)
+    if prefix is not None:
+        P = prefix.shape[1]
+        positions = jnp.arange(P + S)
+        x_tok = embed_tokens(cfg, params, tokens, positions[P:])
+        x = jnp.concatenate([prefix.astype(x_tok.dtype), x_tok], axis=1)
+    else:
+        positions = jnp.arange(S)
+        x = embed_tokens(cfg, params, tokens, positions)
+
+    entries = []
+    for seg, seg_params in zip(cfg.segments, params["segments"]):
+        windows = jnp.array(seg.windows(), dtype=jnp.int32)
+        if seg.kind == "attn":
+            def body(h, inp):
+                p_l, w = inp
+                h = constrain_tokens(h)
+                h, cache = _attn_block_fwd(cfg, p_l, h, positions, w,
+                                           want_cache=True, s_max=s_max)
+                return h, cache
+            x, caches = _scan(cfg, body, x, (seg_params, windows))
+        elif seg.kind == "ssm":
+            def body(h, p_l):
+                h = constrain_tokens(h)
+                h2 = norm_apply(cfg, p_l["norm"], h)
+                y, st = ssm.forward(p_l["ssm"], h2)
+                return h + y, st
+            x, caches = _scan(cfg, body, x, seg_params)
+        elif seg.kind == "rec":
+            def body(h, p_l):
+                h2 = norm_apply(cfg, p_l["norm1"], h)
+                y, st = rglru.forward(p_l["rec"], h2)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["norm2"], h)
+                return h + _ffn_apply(cfg, p_l["ffn"], h2), st
+            x, caches = _scan(cfg, body, x, seg_params)
+        elif seg.kind == "hybrid3":
+            def body(h, inp):
+                p_l, w = inp
+                h2 = norm_apply(cfg, p_l["rec1"]["norm1"], h)
+                y, st1 = rglru.forward(p_l["rec1"]["rec"], h2)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["rec1"]["norm2"], h)
+                h = h + _ffn_apply(cfg, p_l["rec1"]["ffn"], h2)
+                h2 = norm_apply(cfg, p_l["rec2"]["norm1"], h)
+                y, st2 = rglru.forward(p_l["rec2"]["rec"], h2)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["rec2"]["norm2"], h)
+                h = h + _ffn_apply(cfg, p_l["rec2"]["ffn"], h2)
+                h, kv = _attn_block_fwd(cfg, p_l["attn"], h, positions, w,
+                                        want_cache=True, s_max=s_max)
+                return h, (st1, st2, kv)
+            x, caches = _scan(cfg, body, x, (seg_params, windows))
+        elif seg.kind == "xattn":
+            def body(h, p_l):
+                h, cc = _xattn_block_fwd(cfg, p_l, h, positions, enc_out,
+                                         want_cache=True, s_max=s_max)
+                return h, cc
+            x, caches = _scan(cfg, body, x, seg_params)
+        else:
+            raise ValueError(seg.kind)
+        entries.append(caches)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    last = x[:, -1:, :]
+    logits = logits_head(cfg, params, last)
+    total = S + (prefix.shape[1] if prefix is not None else 0)
+    return logits, ServeCache(tuple(entries),
+                              jnp.asarray(total, jnp.int32))
+
+
+def decode(cfg: LMConfig, params, token: jnp.ndarray, cache: ServeCache
+           ) -> Tuple[jnp.ndarray, ServeCache]:
+    """One decode step.  token (B, 1) int32 -> (logits (B,1,V), cache)."""
+    cur = cache.cur_pos
+    x = embed_tokens(cfg, params, token, cur[None])
+    new_entries = []
+    for seg, seg_params, entry in zip(cfg.segments, params["segments"],
+                                      cache.entries):
+        windows = jnp.array(seg.windows(), dtype=jnp.int32)
+        if seg.kind == "attn":
+            def body(h, inp):
+                p_l, w, kv = inp
+                h2 = norm_apply(cfg, p_l["norm1"], h)
+                a, kv2 = attention.decode_step(
+                    p_l["attn"], h2, kv, cur, window=w,
+                    softcap=cfg.attn_softcap,
+                    use_rope=(cfg.pos_embed == "rope"))
+                h = h + a
+                h2 = norm_apply(cfg, p_l["norm2"], h)
+                return h + _ffn_apply(cfg, p_l["ffn"], h2), kv2
+            x, new = _scan(cfg, body, x, (seg_params, windows, entry))
+        elif seg.kind == "ssm":
+            def body(h, inp):
+                p_l, st = inp
+                h2 = norm_apply(cfg, p_l["norm"], h)
+                y, st2 = ssm.forward(p_l["ssm"], h2, st)
+                return h + y, st2
+            x, new = _scan(cfg, body, x, (seg_params, entry))
+        elif seg.kind == "rec":
+            def body(h, inp):
+                p_l, st = inp
+                h2 = norm_apply(cfg, p_l["norm1"], h)
+                y, st2 = rglru.forward(p_l["rec"], h2, st)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["norm2"], h)
+                return h + _ffn_apply(cfg, p_l["ffn"], h2), st2
+            x, new = _scan(cfg, body, x, (seg_params, entry))
+        elif seg.kind == "hybrid3":
+            def body(h, inp):
+                p_l, w, (st1, st2, kv) = inp
+                h2 = norm_apply(cfg, p_l["rec1"]["norm1"], h)
+                y, st1n = rglru.forward(p_l["rec1"]["rec"], h2, st1)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["rec1"]["norm2"], h)
+                h = h + _ffn_apply(cfg, p_l["rec1"]["ffn"], h2)
+                h2 = norm_apply(cfg, p_l["rec2"]["norm1"], h)
+                y, st2n = rglru.forward(p_l["rec2"]["rec"], h2, st2)
+                h = h + y
+                h2 = norm_apply(cfg, p_l["rec2"]["norm2"], h)
+                h = h + _ffn_apply(cfg, p_l["rec2"]["ffn"], h2)
+                h2 = norm_apply(cfg, p_l["attn"]["norm1"], h)
+                a, kvn = attention.decode_step(
+                    p_l["attn"]["attn"], h2, kv, cur, window=w,
+                    softcap=cfg.attn_softcap,
+                    use_rope=(cfg.pos_embed == "rope"))
+                h = h + a
+                h2 = norm_apply(cfg, p_l["attn"]["norm2"], h)
+                h = h + _ffn_apply(cfg, p_l["attn"]["ffn"], h2)
+                return h, (st1n, st2n, kvn)
+            x, new = _scan(cfg, body, x, (seg_params, windows, entry))
+        elif seg.kind == "xattn":
+            def body(h, inp):
+                p_l, (kv_self, kv_cross) = inp
+                h2 = norm_apply(cfg, p_l["norm1"], h)
+                a, kv2 = attention.decode_step(
+                    p_l["self"], h2, kv_self, cur,
+                    use_rope=(cfg.pos_embed == "rope"))
+                h = h + a
+                h2 = norm_apply(cfg, p_l["norm2"], h)
+                c = attention.cross_decode(p_l["cross"], h2, kv_cross)
+                h = h + c
+                h2 = norm_apply(cfg, p_l["norm3"], h)
+                return h + _ffn_apply(cfg, p_l["ffn"], h2), (kv2, kv_cross)
+            x, new = _scan(cfg, body, x, (seg_params, entry))
+        else:
+            raise ValueError(seg.kind)
+        new_entries.append(new)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = logits_head(cfg, params, x)
+    return logits, ServeCache(tuple(new_entries), cur + 1)

@@ -1,0 +1,152 @@
+"""INT8 post-training quantization (the paper deploys INT8 models).
+
+Scheme (matches common IMC deployments and our Pallas ``imc_mvm`` kernel):
+
+* **Weights** — symmetric per-output-channel INT8:
+  ``q_w[..., c] = round(w[..., c] / s_w[c])``, ``s_w[c] = max|w[...,c]| / 127``.
+* **Activations** — symmetric per-tensor INT8 with calibration:
+  ``s_x = max|x| / 127`` over a calibration batch.
+* **Compute** — INT8 x INT8 -> INT32 accumulate (exact), then dequantize
+  ``y = acc * s_x * s_w + b`` (bias kept float, folded from BN).
+* **Optional AIMC noise hook** — additive Gaussian on the accumulator,
+  emulating analog crossbar noise (the IMCE's "optional noise modeling").
+
+All functions are pure-jnp and jit-safe; the Pallas kernel in
+``repro.kernels.imc_mvm`` implements the same integer semantics on TPU
+and is tested against ``quantized_matmul`` bit-exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray          # int8 values
+    scale: jnp.ndarray      # per-channel (weights) or scalar (activations)
+
+
+def weight_scale(w: jnp.ndarray, channel_axis: int = -1) -> jnp.ndarray:
+    axes = tuple(i for i in range(w.ndim) if i != channel_axis % w.ndim)
+    amax = jnp.max(jnp.abs(w), axis=axes)
+    return jnp.maximum(amax, 1e-8) / 127.0
+
+
+def quantize_weight(w: jnp.ndarray, channel_axis: int = -1) -> QTensor:
+    s = weight_scale(w, channel_axis)
+    shape = [1] * w.ndim
+    shape[channel_axis % w.ndim] = -1
+    q = jnp.clip(jnp.round(w / s.reshape(shape)), -127, 127).astype(jnp.int8)
+    return QTensor(q, s)
+
+
+def act_scale(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+
+
+def quantize_act(x: jnp.ndarray, scale: Optional[jnp.ndarray] = None) -> QTensor:
+    s = act_scale(x) if scale is None else scale
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return QTensor(q, s)
+
+
+def dequantize(t: QTensor, channel_axis: int = -1) -> jnp.ndarray:
+    s = t.scale
+    if s.ndim > 0 and s.size > 1:
+        shape = [1] * t.q.ndim
+        shape[channel_axis % t.q.ndim] = -1
+        s = s.reshape(shape)
+    return t.q.astype(jnp.float32) * s
+
+
+# ---------------------------------------------------------------------------
+# integer compute paths (bit-exact oracles for the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def int8_matmul_acc(qx: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
+    """INT8 x INT8 -> INT32 exact accumulation."""
+    return jax.lax.dot_general(
+        qx.astype(jnp.int32), qw.astype(jnp.int32),
+        (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantized_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                     b: Optional[jnp.ndarray] = None,
+                     x_scale: Optional[jnp.ndarray] = None,
+                     noise_std: float = 0.0,
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Quantize -> integer matmul -> dequantize (+ optional AIMC noise)."""
+    qx = quantize_act(x, x_scale)
+    qw = quantize_weight(w, channel_axis=-1)
+    acc = int8_matmul_acc(qx.q, qw.q).astype(jnp.float32)
+    if noise_std > 0.0 and key is not None:
+        acc = acc + noise_std * jax.random.normal(key, acc.shape)
+    y = acc * qx.scale * qw.scale
+    if b is not None:
+        y = y + b
+    return y
+
+
+def quantized_conv2d(x: jnp.ndarray, w: jnp.ndarray,
+                     b: Optional[jnp.ndarray] = None,
+                     stride: int = 1, padding: str = "SAME",
+                     x_scale: Optional[jnp.ndarray] = None,
+                     noise_std: float = 0.0,
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """INT8 conv via integer accumulate, NHWC/HWIO."""
+    qx = quantize_act(x, x_scale)
+    qw = quantize_weight(w, channel_axis=-1)
+    acc = jax.lax.conv_general_dilated(
+        qx.q.astype(jnp.int32), qw.q.astype(jnp.int32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    if noise_std > 0.0 and key is not None:
+        acc = acc + noise_std * jax.random.normal(key, acc.shape)
+    y = acc * qx.scale * qw.scale
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# whole-model PTQ calibration
+# ---------------------------------------------------------------------------
+
+def calibrate_resnet(params: Dict, x: jnp.ndarray, cfg: dict) -> Dict[str, float]:
+    """Record per-layer input activation scales on a calibration batch by
+    replaying the reference forward pass."""
+    from .cnn import resnet  # local import to avoid cycles
+
+    scales: Dict[str, float] = {}
+
+    # trace manually, mirroring resnet.forward
+    from .cnn import layers as L
+
+    def rec(name, t):
+        scales[name] = float(act_scale(t))
+
+    rec("stem", x)
+    h = L.conv2d(params["stem"], x, stride=1, act="relu")
+    for si, blocks in enumerate(params["stages"]):
+        for bi, block in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            identity = h
+            rec(f"s{si}b{bi}.conv1", h)
+            y = L.conv2d(block["conv1"], h, stride=stride, act="relu")
+            rec(f"s{si}b{bi}.conv2", y)
+            y = L.conv2d(block["conv2"], y, stride=1, act=None)
+            if "down" in block:
+                rec(f"s{si}b{bi}.down", identity)
+                identity = L.conv2d(block["down"], identity, stride=stride,
+                                    act=None)
+            h = jax.nn.relu(y + identity)
+    g = jnp.mean(h, axis=(1, 2))
+    rec("fc", g)
+    return scales

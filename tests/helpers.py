@@ -1,0 +1,65 @@
+"""Shared test utilities: random deployment-graph strategies."""
+
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+from hypothesis import strategies as st
+
+from repro.core.graph import Graph, OpKind
+
+IMC_OPS = [OpKind.CONV, OpKind.MVM]
+DPU_OPS = [OpKind.ADD, OpKind.POOL_MAX, OpKind.POOL_AVG, OpKind.CONCAT,
+           OpKind.RESHAPE, OpKind.SOFTMAX]
+
+
+def build_random_graph(n_nodes: int, edge_density: float, seed: int,
+                       imc_fraction: float = 0.6) -> Graph:
+    """Random connected-ish DAG with mixed IMC/DPU nodes.
+
+    Edges only go from lower to higher ids (guarantees acyclicity); every
+    non-source node gets at least one predecessor so the graph is a single
+    weakly-connected component rooted at node 1.
+    """
+    rng = random.Random(seed)
+    g = Graph(f"rand-{seed}")
+    for i in range(n_nodes):
+        if rng.random() < imc_fraction:
+            kind = rng.choice(IMC_OPS)
+            weight = rng.uniform(1e3, 300e3)
+            meta = {
+                "cin_kk": rng.choice([27, 64, 144, 288, 576, 1152]),
+                "cout": rng.choice([16, 32, 64, 128, 256]),
+                "n_vectors": rng.choice([1, 64, 256, 1024, 4096]),
+            }
+        else:
+            kind = rng.choice(DPU_OPS)
+            weight = 0.0
+            meta = {}
+        g.add(
+            f"n{i+1}", kind,
+            flops=rng.uniform(1e5, 5e7),
+            weight_bytes=weight,
+            out_bytes=rng.uniform(1e3, 64e3),
+            out_elems=rng.uniform(1e3, 64e3),
+            meta=meta,
+        )
+    ids = sorted(g.nodes)
+    for j_idx, j in enumerate(ids[1:], start=1):
+        preds = [i for i in ids[:j_idx] if rng.random() < edge_density]
+        if not preds:
+            preds = [rng.choice(ids[:j_idx])]
+        for p in preds:
+            g.add_edge(p, j)
+    g.validate()
+    return g
+
+
+random_graph_st = st.builds(
+    build_random_graph,
+    n_nodes=st.integers(min_value=2, max_value=24),
+    edge_density=st.floats(min_value=0.05, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=10_000),
+    imc_fraction=st.floats(min_value=0.2, max_value=0.9),
+)

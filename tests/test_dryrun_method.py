@@ -1,0 +1,135 @@
+"""Dry-run machinery tests that run on the host (1 CPU device):
+sharding-rule invariants, batch/cache spec coverage, collective parsing,
+shape-skip rules, and the E/B cost-decomposition identity on a toy config.
+
+The full 512-device sweep runs via ``python -m repro.launch.dryrun``
+(results in artifacts/dryrun); these tests validate the *method*.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get_config
+from repro.configs.base import shape_supported
+from repro.launch.dryrun import parse_collectives
+from repro.models.lm import model, sharding
+
+
+def host_mesh():
+    dev = jax.devices()[0]
+    import numpy as np
+    return Mesh(np.array([[dev]]), ("data", "model"))
+
+
+class TestShardingRules:
+    @pytest.mark.parametrize("arch", all_archs())
+    def test_param_specs_cover_tree_and_divide(self, arch):
+        """Every param gets a spec whose axes divide its dims on the
+        production mesh geometry (validated arithmetically — no devices
+        needed)."""
+        cfg = get_config(arch)
+        aparams = model.abstract_params(cfg)
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        flat = jax.tree_util.tree_flatten_with_path(aparams)[0]
+        for path, leaf in flat:
+            spec = sharding.param_pspec(cfg, FakeMesh, path, leaf)
+            assert len(spec) <= len(leaf.shape)
+            for dim, axes in zip(leaf.shape, spec):
+                if axes is None:
+                    continue
+                size = 1
+                for a in (axes if isinstance(axes, tuple) else (axes,)):
+                    size *= FakeMesh.shape[a]
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+    def test_stacked_layer_dim_never_sharded(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        aparams = model.abstract_params(cfg)
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        flat = jax.tree_util.tree_flatten_with_path(aparams)[0]
+        for path, leaf in flat:
+            names = sharding._path_names(path)
+            if "segments" in names and leaf.ndim >= 2:
+                spec = sharding.param_pspec(cfg, FakeMesh, path, leaf)
+                assert spec[0] is None, (names, spec)
+
+    @pytest.mark.parametrize("arch", all_archs())
+    def test_batch_and_cache_specs_exist(self, arch):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = shape_supported(cfg, shape)
+            if not ok:
+                continue
+            spec = model.make_batch_spec(cfg, shape)
+            assert spec, (arch, shape.name)
+            if shape.mode == "decode":
+                cache = model.init_cache_spec(cfg, shape)
+                assert len(cache.entries) == len(cfg.segments)
+
+
+class TestSkipRules:
+    def test_long_500k_skips(self):
+        expected_run = {"falcon-mamba-7b", "gemma3-1b", "gemma2-27b",
+                        "recurrentgemma-9b"}
+        runs = {a for a in all_archs()
+                if shape_supported(get_config(a), SHAPES["long_500k"])[0]}
+        assert runs == expected_run
+
+    def test_full_grid_is_40_cells(self):
+        assert len(all_archs()) * len(SHAPES) == 40
+
+
+class TestCollectiveParse:
+    def test_parses_kinds_and_bytes(self):
+        hlo = """
+          %ar = bf16[8,128] all-reduce(%x), replica_groups={}
+          %ag.1 = f32[16,16]{1,0} all-gather(%y), dimensions={0}
+          %rs = f32[4] reduce-scatter(%z), dimensions={0}
+          %a2a = bf16[2,2] all-to-all(%w)
+          %cp = u32[7] collective-permute(%v)
+          %ars = bf16[8,128] all-reduce-start(%x)
+        """
+        got = parse_collectives(hlo)
+        assert got["all-reduce"] == 8 * 128 * 2 * 2   # ar + ar-start
+        assert got["all-gather"] == 16 * 16 * 4
+        assert got["reduce-scatter"] == 16
+        assert got["all-to-all"] == 8
+        assert got["collective-permute"] == 28
+
+    def test_ignores_non_collectives(self):
+        assert parse_collectives("%d = f32[4,4] dot(%a, %b)") == {}
+
+
+class TestTrainStepMicrobatching:
+    def test_grad_accum_matches_single_batch(self):
+        """n_mb>1 accumulation == one big batch (same data), to fp tol."""
+        cfg = get_config("stablelm-1.6b").smoke()
+        cfg = dataclasses.replace(cfg, microbatch=4, remat=False)
+        key = jax.random.PRNGKey(0)
+        from repro.models.lm import transformer
+        from repro.optim import adamw
+        params = transformer.init_params(cfg, key)
+        from repro.configs.base import ShapeSpec
+        batch = model.synth_batch(cfg, ShapeSpec("x", 16, 8, "train"), key)
+
+        one = model.make_train_step(cfg, microbatch=8)   # n_mb = 1
+        acc = model.make_train_step(cfg, microbatch=4)   # n_mb = 2
+        opt = adamw.init(params)
+        p1, _, m1 = jax.jit(one)(params, opt, batch)
+        p2, _, m2 = jax.jit(acc)(params, opt, batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
+        d = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            p1, p2)
+        assert max(jax.tree_util.tree_leaves(d)) < 5e-2

@@ -1,0 +1,183 @@
+"""Pallas kernel validation (interpret mode on CPU; TPU is the target).
+
+Every kernel sweeps shapes/dtypes and asserts allclose against the
+pure-jnp oracle in repro.kernels.ref.  Integer paths must be bit-exact
+on the accumulator; float epilogues get float tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.conv2d import imc_conv2d
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.imc_mvm import imc_mvm
+from repro.models import quant
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, dtype=jnp.int8)
+
+
+class TestIMCMVM:
+    @pytest.mark.parametrize("M,K,N", [
+        (8, 16, 8), (128, 128, 128), (64, 256, 32), (200, 300, 77),
+        (1, 512, 512), (257, 129, 65),
+    ])
+    def test_matches_oracle(self, M, K, N):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(M * K + N), 3)
+        qx = _rand_int8(k1, (M, K))
+        qw = _rand_int8(k2, (K, N))
+        sx = jnp.float32(0.02)
+        sw = jax.random.uniform(k3, (N,), minval=1e-3, maxval=0.2)
+        b = jax.random.normal(k3, (N,))
+        got = imc_mvm(qx, qw, sx, sw, b, interpret=True)
+        want = ref.imc_mvm_ref(qx, qw, sx, sw, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(1, 64), st.integers(1, 96), st.integers(1, 48),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def test_property_random_shapes(self, M, K, N, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        qx = _rand_int8(k1, (M, K))
+        qw = _rand_int8(k2, (K, N))
+        sw = jnp.full((N,), 0.05, jnp.float32)
+        got = imc_mvm(qx, qw, jnp.float32(0.1), sw, None,
+                      bm=32, bn=32, bk=32, interpret=True)
+        want = ref.imc_mvm_ref(qx, qw, jnp.float32(0.1), sw, None)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_block_shape_sweep(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        qx = _rand_int8(k1, (96, 160))
+        qw = _rand_int8(k2, (160, 96))
+        sw = jnp.full((96,), 0.01, jnp.float32)
+        want = ref.imc_mvm_ref(qx, qw, jnp.float32(0.5), sw, None)
+        for bm, bn, bk in [(16, 16, 16), (32, 64, 32), (128, 128, 128),
+                           (96, 96, 160)]:
+            got = imc_mvm(qx, qw, jnp.float32(0.5), sw, None,
+                          bm=bm, bn=bn, bk=bk, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"blocks {bm},{bn},{bk}")
+
+    def test_matches_quant_module(self):
+        """Kernel semantics == models.quant integer path (same scales)."""
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (32, 64))
+        w = jax.random.normal(jax.random.PRNGKey(8), (64, 16)) * 0.3
+        qxt = quant.quantize_act(x)
+        qwt = quant.quantize_weight(w, channel_axis=-1)
+        got = imc_mvm(qxt.q, qwt.q, qxt.scale, qwt.scale, None,
+                      interpret=True)
+        want = quant.quantized_matmul(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestConv2D:
+    @pytest.mark.parametrize("H,W,Cin,Cout,K,stride", [
+        (8, 8, 4, 8, 3, 1),
+        (16, 16, 8, 16, 3, 2),
+        (32, 32, 3, 16, 3, 1),
+        (10, 10, 5, 7, 1, 1),
+        (9, 9, 4, 6, 3, 2),
+        (12, 12, 8, 130, 5, 1),   # cout > block
+    ])
+    def test_matches_oracle(self, H, W, Cin, Cout, K, stride):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(H * W + Cout), 3)
+        qx = _rand_int8(k1, (2, H, W, Cin))
+        qw = _rand_int8(k2, (K, K, Cin, Cout))
+        sw = jax.random.uniform(k3, (Cout,), minval=1e-3, maxval=0.1)
+        b = jax.random.normal(k3, (Cout,))
+        got = imc_conv2d(qx, qw, jnp.float32(0.04), sw, b, stride=stride,
+                         interpret=True)
+        want = ref.conv2d_ref(qx, qw, jnp.float32(0.04), sw, b,
+                              stride=stride)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_resnet8_first_layer_shapes(self):
+        """The paper's workload: CIFAR 32x32 stem conv."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        qx = _rand_int8(k1, (4, 32, 32, 3))
+        qw = _rand_int8(k2, (3, 3, 3, 16))
+        sw = jnp.full((16,), 0.02, jnp.float32)
+        got = imc_conv2d(qx, qw, jnp.float32(0.05), sw, None, interpret=True)
+        want = ref.conv2d_ref(qx, qw, jnp.float32(0.05), sw, None)
+        assert got.shape == (4, 32, 32, 16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,S,hd", [
+        (1, 2, 128, 64), (2, 4, 256, 32), (1, 1, 384, 128), (2, 2, 100, 64),
+    ])
+    def test_causal_matches_oracle(self, B, H, S, hd):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+        q = jax.random.normal(k1, (B, H, S, hd), jnp.float32)
+        k = jax.random.normal(k2, (B, H, S, hd), jnp.float32)
+        v = jax.random.normal(k3, (B, H, S, hd), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(window), 3)
+        q = jax.random.normal(k1, (1, 2, 256, 64), jnp.float32)
+        k = jax.random.normal(k2, (1, 2, 256, 64), jnp.float32)
+        v = jax.random.normal(k3, (1, 2, 256, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_softcap(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = 3.0 * jax.random.normal(k1, (1, 2, 128, 64), jnp.float32)
+        k = 3.0 * jax.random.normal(k2, (1, 2, 128, 64), jnp.float32)
+        v = jax.random.normal(k3, (1, 2, 128, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, softcap=50.0,
+                              bq=64, bk=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_non_causal_with_padding(self):
+        """S not a multiple of the block: padded keys must be masked."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(k1, (1, 1, 100, 32), jnp.float32)
+        k = jax.random.normal(k2, (1, 1, 100, 32), jnp.float32)
+        v = jax.random.normal(k3, (1, 1, 100, 32), jnp.float32)
+        got = flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(k1, (1, 2, 128, 64)).astype(dtype)
+        k = jax.random.normal(k2, (1, 2, 128, 64)).astype(dtype)
+        v = jax.random.normal(k3, (1, 2, 128, 64)).astype(dtype)
+        got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                       k.astype(jnp.float32),
+                                       v.astype(jnp.float32), causal=True)
+        tol = 2e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)

@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step +
+prefill/decode round trip, shape and finiteness assertions; full-config
+parameter counts sanity (assignment deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, all_archs, get_config
+from repro.configs.base import ShapeSpec
+from repro.models.lm import model, transformer
+from repro.optim import adamw
+
+TRAIN_SHAPE = ShapeSpec("smoke-train", 32, 8, "train")
+SERVE_SHAPE = ShapeSpec("smoke-serve", 32, 4, "prefill")
+
+#: full-config parameter-count windows (billions) — sanity vs the model
+#: names; MoE counts are total (active checked separately).
+PARAM_WINDOWS = {
+    "granite-moe-3b-a800m": (2.5, 4.0),
+    "qwen3-moe-235b-a22b": (200.0, 260.0),
+    "falcon-mamba-7b": (6.0, 8.0),
+    "stablelm-1.6b": (1.2, 1.9),
+    "gemma3-1b": (0.8, 1.3),
+    "gemma2-27b": (24.0, 30.0),
+    "starcoder2-3b": (2.5, 3.5),
+    "whisper-small": (0.15, 0.35),
+    "paligemma-3b": (2.0, 3.2),    # LM backbone (SigLIP stubbed)
+    "recurrentgemma-9b": (8.0, 11.0),
+}
+
+
+@pytest.fixture(scope="module", params=all_archs())
+def arch(request):
+    return request.param
+
+
+class TestSmoke:
+    def test_train_step(self, arch):
+        cfg = get_config(arch).smoke()
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        batch = model.synth_batch(cfg, TRAIN_SHAPE, key)
+        step = jax.jit(model.make_train_step(cfg))
+        opt = adamw.init(params)
+        p2, o2, metrics = step(params, opt, batch)
+        assert jnp.isfinite(metrics["loss"])
+        assert metrics["loss"] > 0
+        assert int(o2.step) == 1
+        # params actually changed
+        diff = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            params, p2)
+        assert max(jax.tree_util.tree_leaves(diff)) > 0
+
+    def test_loss_decreases_over_steps(self, arch):
+        cfg = get_config(arch).smoke()
+        key = jax.random.PRNGKey(1)
+        params = transformer.init_params(cfg, key)
+        batch = model.synth_batch(cfg, TRAIN_SHAPE, key)  # fixed batch
+        tcfg = model.TrainStepConfig(opt=adamw.AdamWConfig(
+            lr=3e-3, warmup_steps=1, total_steps=1000, weight_decay=0.0))
+        step = jax.jit(model.make_train_step(cfg, tcfg))
+        opt = adamw.init(params)
+        losses = []
+        for _ in range(6):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]   # overfits a fixed batch
+
+    def test_prefill_decode_roundtrip(self, arch):
+        cfg = get_config(arch).smoke()
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        batch = model.synth_batch(cfg, SERVE_SHAPE, key)
+        prefill = jax.jit(model.make_prefill_step(cfg, s_max=64))
+        decode = jax.jit(model.make_decode_step(cfg))
+        logits, cache = prefill(params, batch)
+        assert logits.shape[0] == SERVE_SHAPE.global_batch
+        assert logits.shape[-1] == cfg.vocab
+        assert jnp.isfinite(logits).all()
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        for _ in range(3):
+            logits, cache = decode(params, tok, cache)
+            assert jnp.isfinite(logits).all()
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+    def test_decode_matches_teacher_forcing(self, arch):
+        """Incremental decode must agree with full-sequence forward on the
+        same token stream (cache correctness)."""
+        if arch == "whisper-small":
+            pytest.skip("enc-dec full-forward comparison covered separately")
+        cfg = get_config(arch).smoke()
+        if cfg.n_experts:
+            # capacity-MoE drops are sequence-length dependent, so decode
+            # vs teacher-forcing only agree when nothing drops
+            import dataclasses
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=2.0 * cfg.n_experts / cfg.top_k)
+        key = jax.random.PRNGKey(2)
+        params = transformer.init_params(cfg, key)
+        B, S = 2, 12
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)
+        prefix = None
+        if cfg.num_prefix_tokens:
+            prefix = jax.random.normal(
+                key, (B, cfg.num_prefix_tokens, cfg.prefix_dim),
+                jnp.bfloat16)
+        # full forward logits at the last position
+        hidden = transformer.forward_train(cfg, params, tokens, prefix=prefix)
+        full_logits = transformer.logits_head(cfg, params, hidden[:, -1:])
+        # prefill on the first S-1 tokens, decode token S-1
+        batch = {"tokens": tokens[:, :-1]}
+        if prefix is not None:
+            batch["prefix"] = prefix
+        _, cache = model.make_prefill_step(cfg, s_max=32)(params, batch)
+        dec_logits, _ = model.make_decode_step(cfg)(
+            params, tokens[:, -1:], cache)
+        # bf16 stack + different reduction orders: modest tolerance
+        a = jax.nn.log_softmax(full_logits[:, 0])
+        b = jax.nn.log_softmax(dec_logits[:, 0])
+        err = jnp.max(jnp.abs(a - b))
+        assert err < 0.12, float(err)
+        agree = jnp.mean((jnp.argmax(a, -1) == jnp.argmax(b, -1))
+                         .astype(jnp.float32))
+        assert agree >= 0.5
+
+
+class TestFullConfigs:
+    def test_param_counts(self, arch):
+        lo, hi = PARAM_WINDOWS[arch]
+        n = transformer.param_count(get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+    def test_layer_counts(self, arch):
+        cfg = get_config(arch)
+        expected = {
+            "granite-moe-3b-a800m": 32, "qwen3-moe-235b-a22b": 94,
+            "falcon-mamba-7b": 64, "stablelm-1.6b": 24, "gemma3-1b": 26,
+            "gemma2-27b": 46, "starcoder2-3b": 30, "whisper-small": 12,
+            "paligemma-3b": 18, "recurrentgemma-9b": 38,
+        }[arch]
+        assert cfg.n_layers == expected
+
+    def test_moe_active_params(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        total = transformer.param_count(cfg)
+        inactive = (cfg.n_experts - cfg.top_k) * cfg.n_layers * 3 \
+            * cfg.d_model * cfg.d_ff
+        active = (total - inactive) / 1e9
+        assert 15.0 <= active <= 26.0     # "a22b"

@@ -1,0 +1,136 @@
+"""Validation of the paper's §V experimental claims on our IMCE
+simulator + calibrated cost model (EXPERIMENTS.md §Paper-validation).
+
+Absolute milliseconds are not reproducible (the paper's per-node FPGA
+measurements are unpublished); every *relative* claim is validated here.
+"""
+
+import pytest
+
+from repro.core import (CostModel, IMCESimulator, get_scheduler, make_pus)
+from repro.core.graph import PUType
+from repro.models.cnn.graphs import (resnet8_graph, resnet18_graph,
+                                     yolov8n_graph)
+
+ALGS = ("lblp", "wb", "rr", "rd")
+
+
+def run_all(g, n_imc, n_dpu, frames=96):
+    cm = CostModel()
+    sim = IMCESimulator(g, cm)
+    out = {}
+    for alg in ALGS:
+        a = get_scheduler(alg, cm).schedule(g, make_pus(n_imc, n_dpu))
+        out[alg] = sim.run(a, frames=frames)
+    return out
+
+
+@pytest.fixture(scope="module")
+def resnet18_12pu():
+    return run_all(resnet18_graph(), 8, 4, frames=128)
+
+
+class TestFig2ResNet8:
+    """Fig. 2: LBLP best rate & latency at every PU count; convergence
+    when #PUs == #nodes (14)."""
+
+    @pytest.mark.parametrize("n_imc,n_dpu", [(2, 1), (4, 2), (7, 3), (10, 4)])
+    def test_lblp_best_rate_and_latency(self, n_imc, n_dpu):
+        res = run_all(resnet8_graph(), n_imc, n_dpu)
+        best_rate = max(r.rate for r in res.values())
+        best_lat = min(r.latency for r in res.values())
+        assert res["lblp"].rate >= best_rate * 0.999
+        assert res["lblp"].latency <= best_lat * 1.001
+
+    def test_convergence_at_14_pus(self):
+        res = run_all(resnet8_graph(), 10, 4)
+        rates = [r.rate for r in res.values()]
+        lats = [r.latency for r in res.values()]
+        assert max(rates) / min(rates) < 1.001
+        assert max(lats) / min(lats) < 1.001
+
+
+class TestFig3TableIResNet18:
+    """Fig. 3 + Table I: 12 PUs (8 IMC + 4 DPU)."""
+
+    def test_lblp_dominates(self, resnet18_12pu):
+        res = resnet18_12pu
+        assert res["lblp"].rate >= max(r.rate for r in res.values()) * 0.999
+        assert res["lblp"].latency <= min(r.latency for r in res.values()) * 1.001
+
+    def test_rate_gain_over_wb(self, resnet18_12pu):
+        """Paper: 'LBLP achieves more than 2x processing rate'."""
+        ratio = resnet18_12pu["lblp"].rate / resnet18_12pu["wb"].rate
+        assert ratio >= 2.0
+
+    def test_latency_gain_over_wb(self, resnet18_12pu):
+        """Paper: 'x1.4 less latency compared to WB'."""
+        ratio = resnet18_12pu["wb"].latency / resnet18_12pu["lblp"].latency
+        assert 1.2 <= ratio <= 1.9
+
+    def test_utilization_contrast(self, resnet18_12pu):
+        """Paper Table I: 78.3% mean utilization for LBLP vs 24.4% for WB
+        (their mean over all PUs; our IMC-PU mean ~79% and WB collapses
+        to ~12-25%)."""
+        lblp, wb = resnet18_12pu["lblp"], resnet18_12pu["wb"]
+        imc_ids = range(1, 9)
+        lblp_imc = sum(lblp.utilization[p] for p in imc_ids) / 8
+        wb_imc = sum(wb.utilization[p] for p in imc_ids) / 8
+        assert lblp_imc >= 0.70           # paper: 78.3%
+        assert wb_imc <= 0.35             # paper: 24.4%
+        assert lblp_imc > 2.5 * wb_imc
+
+    def test_wb_weight_balance_vs_time_imbalance(self, resnet18_12pu):
+        """WB's defining property: weights nearly equal across IMC PUs
+        while execution-time loads collapse."""
+        cm = CostModel()
+        g = resnet18_graph()
+        a = get_scheduler("wb", cm).schedule(g, make_pus(8, 4))
+        w = a.weights(g)
+        imc_w = [w[p] for p in range(1, 9)]
+        # paper Table I WB row spans 28.1%..100% (ratio 3.56): the three
+        # indivisible 590KB stage-4 convs bound how balanced WB can get
+        assert max(imc_w) / max(min(imc_w), 1.0) < 4.0   # weights balanced
+        load = a.load(g, cm)
+        imc_l = [load[p] for p in range(1, 9)]
+        assert max(imc_l) / max(min(imc_l), 1e-12) > 5.0  # time collapsed
+
+
+class TestFig4IMCvsDPUSplit:
+    """Fig. 4: at fixed 12 PUs, LBLP > WB for every IMC/DPU split."""
+
+    @pytest.mark.parametrize("n_dpu", [2, 4, 6])
+    def test_lblp_beats_wb_all_splits(self, n_dpu):
+        res = run_all(resnet18_graph(), 12 - n_dpu, n_dpu)
+        assert res["lblp"].rate > res["wb"].rate
+        assert res["lblp"].latency <= res["wb"].latency * 1.001
+
+
+class TestYOLOv8n:
+    """§V.C: YOLO is mostly sequential; parallelism affects <= ~10% of
+    latency, measured LBLP-vs-WB isolated-latency gap small (paper: up
+    to 6% under their measurement protocol)."""
+
+    def test_off_path_share_near_10pct(self):
+        g = yolov8n_graph()
+        cm = CostModel()
+        crit = g.critical_time(lambda n: cm.time(n))
+        total = sum(cm.time(n) for n in g.nodes.values() if not n.is_free())
+        assert 0.05 <= (total - crit) / total <= 0.20   # paper: ~10%
+
+    def test_isolated_latency_gap_bounded(self):
+        g = yolov8n_graph()
+        cm = CostModel()
+        sim = IMCESimulator(g, cm)
+        gaps = []
+        for n_imc, n_dpu in ((12, 6), (16, 8)):
+            lat = {}
+            for alg in ("lblp", "wb"):
+                a = get_scheduler(alg, cm).schedule(g, make_pus(n_imc, n_dpu))
+                lat[alg] = sim.latency_only(a)
+            gaps.append(abs(lat["wb"] - lat["lblp"]) / min(lat.values()))
+        assert max(gaps) <= 0.10    # bounded by the parallelizable share
+
+    def test_lblp_rate_still_wins(self):
+        res = run_all(yolov8n_graph(), 16, 8, frames=48)
+        assert res["lblp"].rate >= res["wb"].rate

@@ -1,0 +1,284 @@
+"""Runtime-tier tests: checkpoint atomicity/resume, data determinism,
+fault-tolerant training loop, straggler policy, gradient compression,
+elastic rescheduling, serving loop."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core import CostModel, make_pus
+from repro.core.elastic import ElasticSession
+from repro.core.pipeline_partition import partition, transformer_block_graph
+from repro.data.pipeline import DataConfig, DataIterator, make_batch
+from repro.models.cnn.graphs import resnet18_graph
+from repro.models.lm import model, transformer
+from repro.optim import adamw, compression
+from repro.runtime.serve_loop import Request, Server
+from repro.runtime.straggler import DeadlineDataIterator, StragglerPolicy
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+SMOKE = get_config("stablelm-1.6b").smoke()
+TRAIN_SHAPE = ShapeSpec("rt-train", 32, 8, "train")
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": [jnp.ones((4,), jnp.bfloat16),
+                      {"c": jnp.asarray(3, jnp.int32)}]}
+        ckpt.save(str(tmp_path), 5, tree, extras={"note": "x"})
+        out, extras = ckpt.restore(str(tmp_path), 5, tree)
+        assert extras["note"] == "x"
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+            assert a.dtype == b.dtype
+
+    def test_latest_ignores_uncommitted(self, tmp_path):
+        tree = {"a": jnp.zeros(2)}
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, tree)
+        # fake a torn write: directory without COMMITTED marker
+        os.makedirs(tmp_path / "step_000000003")
+        assert ckpt.latest_step(str(tmp_path)) == 2
+
+    def test_prune_keeps_newest(self, tmp_path):
+        tree = {"a": jnp.zeros(2)}
+        for s in (1, 2, 3, 4):
+            ckpt.save(str(tmp_path), s, tree)
+        ckpt.prune(str(tmp_path), keep=2)
+        assert ckpt.latest_step(str(tmp_path)) == 4
+        assert ckpt.restore_latest(str(tmp_path), tree) is not None
+        assert not os.path.exists(tmp_path / "step_000000001")
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros((3,))})
+
+
+class TestData:
+    def test_deterministic_per_step(self):
+        b1 = make_batch(SMOKE, TRAIN_SHAPE, 7)
+        b2 = make_batch(SMOKE, TRAIN_SHAPE, 7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = make_batch(SMOKE, TRAIN_SHAPE, 8)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_resume_replays_stream(self):
+        it1 = DataIterator(SMOKE, TRAIN_SHAPE, start_step=0)
+        seen = [next(it1)["tokens"] for _ in range(5)]
+        it2 = DataIterator(SMOKE, TRAIN_SHAPE, start_step=3)
+        np.testing.assert_array_equal(next(it2)["tokens"], seen[3])
+
+    def test_host_sharding_disjoint(self):
+        d0 = DataConfig(num_hosts=2, host_id=0)
+        d1 = DataConfig(num_hosts=2, host_id=1)
+        b0 = make_batch(SMOKE, TRAIN_SHAPE, 0, d0)
+        b1 = make_batch(SMOKE, TRAIN_SHAPE, 0, d1)
+        assert b0["tokens"].shape[0] == TRAIN_SHAPE.global_batch // 2
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_tokens_in_vocab(self):
+        b = make_batch(SMOKE, TRAIN_SHAPE, 0)
+        assert int(b["tokens"].max()) < SMOKE.vocab
+        assert int(b["tokens"].min()) >= 0
+
+
+class TestTrainLoop:
+    def _loop_cfg(self, tmp_path, total=6):
+        return TrainLoopConfig(
+            total_steps=total, ckpt_every=2, ckpt_dir=str(tmp_path),
+            log_every=0,
+            opt=adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=100))
+
+    def test_runs_and_checkpoints(self, tmp_path):
+        rep = train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path))
+        assert rep.final_step == 6
+        assert ckpt.latest_step(str(tmp_path)) == 6
+        assert all(np.isfinite(rep.losses))
+
+    def test_resume_after_interruption(self, tmp_path):
+        train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path, total=4))
+        rep = train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path, total=8))
+        assert rep.resumed_from == 4
+        assert rep.steps_run == 4
+        assert rep.final_step == 8
+
+    def test_transient_fault_retried(self, tmp_path):
+        fails = {"left": 2}
+
+        def hook(step):
+            if step == 2 and fails["left"] > 0:
+                fails["left"] -= 1
+                raise RuntimeError("injected device failure")
+
+        rep = train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path),
+                    fault_hook=hook)
+        assert rep.retries == 2
+        assert rep.final_step == 6
+
+    def test_persistent_fault_leaves_consistent_ckpt(self, tmp_path):
+        def hook(step):
+            if step == 3:
+                raise RuntimeError("dead node")
+
+        with pytest.raises(RuntimeError):
+            train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path),
+                  fault_hook=hook)
+        # a committed checkpoint exists and a fresh run resumes cleanly
+        assert ckpt.latest_step(str(tmp_path)) is not None
+        rep = train(SMOKE, TRAIN_SHAPE, self._loop_cfg(tmp_path))
+        assert rep.resumed_from is not None
+
+
+class TestStraggler:
+    def test_slow_batches_substituted(self):
+        slow_steps = {3, 4}
+        src = DataIterator(SMOKE, TRAIN_SHAPE, start_step=0,
+                           delay_fn=lambda s: 0.3 if s in slow_steps else 0.0)
+        pol = StragglerPolicy(slack=2.0, min_deadline_s=0.1)
+        it = DeadlineDataIterator(SMOKE, TRAIN_SHAPE, src, pol)
+        for _ in range(6):
+            b = next(it)
+            assert b["tokens"].shape[0] == TRAIN_SHAPE.global_batch
+        assert pol.drops == len(slow_steps)
+
+    def test_escalation_fires(self):
+        src = DataIterator(SMOKE, TRAIN_SHAPE, start_step=0,
+                           delay_fn=lambda s: 0.2 if s > 0 else 0.0)
+        pol = StragglerPolicy(slack=1.5, min_deadline_s=0.05,
+                              escalate_after=3)
+        fired = []
+        it = DeadlineDataIterator(SMOKE, TRAIN_SHAPE, src, pol,
+                                  on_escalate=lambda: fired.append(1))
+        for _ in range(6):
+            next(it)
+        assert fired
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+        st = compression.init(g)
+        q, s, st = compression.compress(g, st)
+        back = compression.decompress(q, s)
+        err = jnp.max(jnp.abs(back["w"] - g["w"]))
+        assert float(err) <= float(s["w"]) * 0.5 + 1e-7
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """With a CONSTANT gradient, error feedback makes the mean of the
+        decompressed stream converge to the true gradient."""
+        g = {"w": jax.random.normal(jax.random.PRNGKey(1), (32,)) * 0.01}
+        st = compression.init(g)
+        acc = jnp.zeros((32,))
+        n = 50
+        for _ in range(n):
+            q, s, st = compression.compress(g, st)
+            acc = acc + compression.decompress(q, s)["w"]
+        np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                                   rtol=0.02, atol=1e-5)
+
+    def test_traffic_reduction(self):
+        g = {"w": jnp.zeros((1000,), jnp.float32)}
+        st = compression.init(g)
+        q, s, _ = compression.compress(g, st)
+        assert compression.compressed_bytes(q) * 4 == compression.raw_bytes(g)
+
+
+class TestElastic:
+    def test_failure_degrades_gracefully(self):
+        g = resnet18_graph()
+        sess = ElasticSession(g, make_pus(8, 4))
+        r0 = sess.history[0].rate
+        ev = sess.fail(3)
+        assert ev.n_pus == 11
+        assert 0.5 * r0 <= ev.rate <= r0 * 1.001
+        # mapping no longer uses the dead PU
+        assert 3 not in set(ev.mapping.values())
+
+    def test_rejoin_recovers(self):
+        from repro.core import PUSpec, PUType
+        g = resnet18_graph()
+        sess = ElasticSession(g, make_pus(8, 4))
+        r0 = sess.history[0].rate
+        sess.fail(5)
+        ev = sess.join(PUSpec(pu_id=5, pu_type=PUType.IMC))
+        assert ev.rate == pytest.approx(r0, rel=1e-6)
+
+    def test_sequence_of_failures(self):
+        """Rate degrades gracefully over successive failures (LBLP is a
+        greedy heuristic, so single steps may wobble slightly — the
+        invariant is bounded degradation, ending below the start)."""
+        g = resnet18_graph()
+        sess = ElasticSession(g, make_pus(8, 4))
+        r0 = sess.history[0].rate
+        rates = [r0]
+        for pid in (1, 2, 9):
+            rates.append(sess.fail(pid).rate)
+        assert all(r <= r0 * 1.05 for r in rates)
+        assert rates[-1] <= r0
+        assert rates[-1] >= r0 * 0.4          # graceful, not collapse
+
+
+class TestServeLoop:
+    def _setup(self, fault_hook=None):
+        cfg = SMOKE
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, Server(cfg, params, max_batch=2, s_max=64,
+                           fault_hook=fault_hook)
+
+    def test_serves_batch_of_requests(self):
+        cfg, server = self._setup()
+        reqs = [Request(rid=i,
+                        prompt=jax.random.randint(
+                            jax.random.PRNGKey(i), (8,), 0, cfg.vocab,
+                            dtype=jnp.int32),
+                        max_new=4)
+                for i in range(5)]
+        stats = server.serve(reqs)
+        assert stats.served == 5
+        assert stats.prefills >= 3          # ceil(5/2) batches
+        for r in reqs:
+            assert len(r.out_tokens) == 4
+            assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+    def test_decode_failure_recovers_by_reprefill(self):
+        calls = {"n": 0}
+
+        def hook(step):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("injected decode failure")
+
+        cfg, server = self._setup(fault_hook=hook)
+        reqs = [Request(rid=0, prompt=jnp.arange(6, dtype=jnp.int32),
+                        max_new=4)]
+        stats = server.serve(reqs)
+        assert stats.retries == 1
+        assert len(reqs[0].out_tokens) == 4
+
+
+class TestPipelinePartition:
+    def test_dense_partition_balanced(self):
+        plan = partition(get_config("stablelm-1.6b"), n_stages=4)
+        assert len(plan.loads) == 4
+        assert plan.imbalance < 1.35
+
+    def test_moe_partition_handles_heterogeneity(self):
+        plan = partition(get_config("qwen3-moe-235b-a22b"), n_stages=8)
+        assert plan.imbalance < 1.5
+        assert len(plan.boundaries) == 8
+
+    def test_block_graph_counts(self):
+        cfg = get_config("recurrentgemma-9b")
+        g = transformer_block_graph(cfg, 2048)
+        # embed + 38 blocks + head
+        assert len(g) == cfg.n_layers + 2
