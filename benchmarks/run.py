@@ -13,8 +13,9 @@ import time
 
 def main() -> None:
     from . import (elastic_bench, fig2_resnet8, fig3_resnet18, fig4_imc_dpu,
-                   kernel_bench, lm_partition, scheduler_quality,
-                   sensitivity, table1_utilization, yolo_latency)
+                   kernel_bench, lm_partition, multi_tenant,
+                   scheduler_quality, sensitivity, table1_utilization,
+                   yolo_latency)
 
     suites = {
         "fig2": fig2_resnet8.main,
@@ -25,6 +26,7 @@ def main() -> None:
         "quality": scheduler_quality.main,
         "kernels": kernel_bench.main,
         "elastic": elastic_bench.main,
+        "multi_tenant": multi_tenant.main,
         "sensitivity": sensitivity.main,
         "partition": lm_partition.main,
     }

@@ -10,7 +10,7 @@ from .cost import (
     PUSpec,
     make_pus,
 )
-from .graph import Graph, GraphError, Node, OpKind, PUType
+from .graph import Graph, GraphError, MultiTenantGraph, Node, OpKind, PUType
 from .metrics import NormalizedPoint, normalize, utilization_table
 from .schedulers import (
     Assignment,
@@ -19,7 +19,12 @@ from .schedulers import (
     available,
     get_scheduler,
 )
-from .simulator import IMCESimulator, SimResult
+from .simulator import (
+    IMCESimulator,
+    MultiTenantSimulator,
+    SimResult,
+    TenantMetrics,
+)
 
 __all__ = [
     "CostModel",
@@ -30,6 +35,7 @@ __all__ = [
     "make_pus",
     "Graph",
     "GraphError",
+    "MultiTenantGraph",
     "Node",
     "OpKind",
     "PUType",
@@ -42,5 +48,7 @@ __all__ = [
     "available",
     "get_scheduler",
     "IMCESimulator",
+    "MultiTenantSimulator",
     "SimResult",
+    "TenantMetrics",
 ]

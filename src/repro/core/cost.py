@@ -114,7 +114,13 @@ class CostModel:
         """Execution time of ``node`` on a PU of ``pu_type`` (default: the
         node's preferred type)."""
         pu_type = pu_type or node.pu_type
-        key = (node.node_id, id(node), pu_type, speed)
+        # Memoize on the cost-relevant content, never on object identity:
+        # an id()-based key aliases when a dead node's address is reused by
+        # a new graph, handing back a stale time (a CostModel routinely
+        # outlives the graphs it prices, e.g. across benchmark sweeps).
+        meta = node.meta
+        key = (node.kind, pu_type, speed, node.flops, node.out_elems,
+               meta.get("cin_kk"), meta.get("cout"), meta.get("n_vectors"))
         if key in self._cache:
             return self._cache[key]
         t = self._time_uncached(node, pu_type) / max(speed, 1e-12)

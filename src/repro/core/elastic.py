@@ -17,9 +17,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cost import CostModel, PUSpec
-from .graph import Graph
+from .graph import Graph, MultiTenantGraph
 from .schedulers import Assignment, get_scheduler
-from .simulator import IMCESimulator, SimResult
+from .simulator import IMCESimulator, MultiTenantSimulator, SimResult
 
 
 @dataclass
@@ -29,17 +29,22 @@ class ElasticEvent:
     rate: float
     latency: float
     mapping: Dict[int, int]
+    #: per-tenant steady-state rates when the session serves a
+    #: MultiTenantGraph — one PU failure re-co-schedules *all* tenants.
+    tenant_rates: Optional[Dict[str, float]] = None
+    tenant_latencies: Optional[Dict[str, float]] = None
 
 
 class ElasticSession:
     """Maintains a live node->PU mapping under PU failures."""
 
     def __init__(self, graph: Graph, pus: Sequence[PUSpec],
-                 algorithm: str = "lblp",
+                 algorithm: Optional[str] = None,
                  cost_model: Optional[CostModel] = None) -> None:
         self.g = graph
         self.cm = cost_model or CostModel()
-        self.algorithm = algorithm
+        self._multi = isinstance(graph, MultiTenantGraph)
+        self.algorithm = algorithm or ("lblp-mt" if self._multi else "lblp")
         self.live: List[PUSpec] = list(pus)
         self.history: List[ElasticEvent] = []
         self._schedule(None)
@@ -50,7 +55,8 @@ class ElasticSession:
             raise RuntimeError("no surviving PUs")
         sched = get_scheduler(self.algorithm, self.cm)
         self.assignment: Assignment = sched.schedule(self.g, self.live)
-        sim = IMCESimulator(self.g, self.cm)
+        sim_cls = MultiTenantSimulator if self._multi else IMCESimulator
+        sim = sim_cls(self.g, self.cm)
         res: SimResult = sim.run(self.assignment, frames=64)
         self.history.append(ElasticEvent(
             failed_pu=failed,
@@ -58,6 +64,10 @@ class ElasticSession:
             rate=res.rate,
             latency=res.latency,
             mapping=dict(self.assignment.mapping),
+            tenant_rates=({t: m.rate for t, m in res.tenants.items()}
+                          if res.tenants else None),
+            tenant_latencies=({t: m.latency for t, m in res.tenants.items()}
+                              if res.tenants else None),
         ))
 
     # -- public API ------------------------------------------------------

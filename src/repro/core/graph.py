@@ -228,21 +228,25 @@ class Graph:
         self._topo_cache = order
         return list(order)
 
-    def longest_path(self, time_of: Callable[[Node], float]) -> List[int]:
+    def longest_path(self, time_of: Callable[[Node], float],
+                     within: Optional[Iterable[int]] = None) -> List[int]:
         """Maximum-total-``time_of`` source->sink path (paper Alg. 1 step 1).
 
         Classic DAG dynamic program over the topological order.  Node
         weights only (edge transfer times are handled by the simulator,
         matching the paper which defines the LP over node execution
-        times).
+        times).  ``within`` restricts the DP to a node subset (per-tenant
+        paths on a multi-tenant union); predecessors outside the subset
+        are ignored.
         """
-        order = self.topo_order()
+        members = None if within is None else set(within)
         best: Dict[int, float] = {}
         back: Dict[int, Optional[int]] = {}
-        for nid in order:
-            node = self.nodes[nid]
-            t = time_of(node)
-            preds = self._pred[nid]
+        for nid in self.topo_order():
+            if members is not None and nid not in members:
+                continue
+            t = time_of(self.nodes[nid])
+            preds = [p for p in self._pred[nid] if p in best]
             if preds:
                 p = max(preds, key=lambda q: best[q])
                 best[nid] = best[p] + t
@@ -250,6 +254,8 @@ class Graph:
             else:
                 best[nid] = t
                 back[nid] = None
+        if not best:
+            raise GraphError("longest_path over an empty node set")
         end = max(best, key=lambda q: best[q])
         path: List[int] = []
         cur: Optional[int] = end
@@ -345,3 +351,151 @@ class Graph:
         for nid, node in self.nodes.items():
             if node.node_id != nid:
                 raise GraphError(f"node key {nid} != node_id {node.node_id}")
+
+
+class MultiTenantGraph(Graph):
+    """Tagged disjoint union of per-model deployment graphs.
+
+    Multi-tenant serving: several CNNs are resident on the same PU fleet at
+    once, each receiving its own frame stream.  The union is itself a
+    ``Graph`` — every scheduler and the simulator consume it unchanged —
+    but nodes carry their tenant tag (``node.meta["tenant"]``) and the
+    union remembers each tenant's node set, sources and sinks, so
+    schedulers can balance *per-tenant* critical paths and the simulator
+    can drive *per-tenant* frame streams.
+
+    Node ids of ingested graphs are remapped onto disjoint ranges
+    (``_id_map`` keeps tenant-local id -> union id); the constituent
+    graphs are never mutated.
+    """
+
+    def __init__(self, name: str = "multi-tenant") -> None:
+        super().__init__(name)
+        self.tenants: List[str] = []
+        self._tenant_nodes: Dict[str, List[int]] = {}
+        self._id_map: Dict[str, Dict[int, int]] = {}
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def union(cls, graphs: Sequence[Graph],
+              names: Optional[Sequence[str]] = None,
+              name: str = "multi-tenant") -> "MultiTenantGraph":
+        """Build the tagged disjoint union of ``graphs``.
+
+        ``names`` defaults to the constituent graphs' names, deduplicated
+        with ``#k`` suffixes so two instances of the same model can be
+        co-resident.
+        """
+        mt = cls(name)
+        if names is None:
+            names = []
+            seen: Dict[str, int] = {}
+            for g in graphs:
+                k = seen.get(g.name, 0)
+                seen[g.name] = k + 1
+                names.append(g.name if k == 0 else f"{g.name}#{k}")
+        if len(names) != len(graphs):
+            raise GraphError("names/graphs length mismatch")
+        for g, tenant in zip(graphs, names):
+            mt.add_tenant(g, tenant)
+        return mt
+
+    def add_tenant(self, g: Graph, tenant: Optional[str] = None) -> str:
+        """Ingest one model graph under tag ``tenant`` (default: its name)."""
+        tenant = tenant if tenant is not None else g.name
+        if tenant in self._tenant_nodes:
+            raise GraphError(f"duplicate tenant '{tenant}'")
+        if not g.nodes:
+            raise GraphError(f"tenant '{tenant}' has an empty graph")
+        base = max(self.nodes) if self.nodes else 0
+        remap: Dict[int, int] = {}
+        for old_id in sorted(g.nodes):
+            n = g.nodes[old_id]
+            new_id = base + len(remap) + 1
+            remap[old_id] = new_id
+            self.add_node(Node(
+                node_id=new_id,
+                name=f"{tenant}/{n.name}",
+                kind=n.kind,
+                flops=n.flops,
+                weight_bytes=n.weight_bytes,
+                out_bytes=n.out_bytes,
+                out_elems=n.out_elems,
+                pu_type=n.pu_type,
+                fused_act=n.fused_act,
+                meta={**n.meta, "tenant": tenant},
+            ))
+        for s, d in g.edges():
+            self.add_edge(remap[s], remap[d])
+        self.tenants.append(tenant)
+        self._tenant_nodes[tenant] = sorted(remap.values())
+        self._id_map[tenant] = remap
+        return tenant
+
+    # -- per-tenant queries ------------------------------------------------
+    def tenant_of(self, nid: int) -> str:
+        node = self.nodes[nid]  # unknown id -> KeyError, not a tag error
+        try:
+            return node.meta["tenant"]
+        except KeyError:
+            raise GraphError(f"node {nid} has no tenant tag") from None
+
+    def tenant_nodes(self, tenant: str) -> List[int]:
+        return list(self._tenant_nodes[tenant])
+
+    def tenant_sources(self, tenant: str) -> List[int]:
+        return [n for n in self._tenant_nodes[tenant] if not self._pred[n]]
+
+    def tenant_sinks(self, tenant: str) -> List[int]:
+        return [n for n in self._tenant_nodes[tenant] if not self._succ[n]]
+
+    def union_id(self, tenant: str, local_id: int) -> int:
+        """Union node id of ``local_id`` in the tenant's original graph."""
+        return self._id_map[tenant][local_id]
+
+    def tenant_longest_path(self, tenant: str,
+                            time_of: Callable[[Node], float]) -> List[int]:
+        """Longest path restricted to one tenant's component.
+
+        Components are disjoint, so the DP over the union's topological
+        order filtered to the tenant's nodes is exact.
+        """
+        return self.longest_path(time_of, within=self._tenant_nodes[tenant])
+
+    # -- (de)serialization: tenant structure must survive the round-trip ----
+    def to_json(self) -> str:
+        raw = json.loads(super().to_json())
+        # node meta carries the tenant tag (plus cost-model shape hints)
+        for nd in raw["nodes"]:
+            nd["meta"] = self.nodes[nd["id"]].meta
+        raw["tenants"] = list(self.tenants)
+        raw["id_map"] = self._id_map
+        return json.dumps(raw, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MultiTenantGraph":
+        raw = json.loads(text)
+        mt = cls(raw["name"])
+        for nd in raw["nodes"]:
+            mt.add_node(
+                Node(
+                    node_id=nd["id"],
+                    name=nd["name"],
+                    kind=OpKind(nd["kind"]),
+                    flops=nd["flops"],
+                    weight_bytes=nd["weight_bytes"],
+                    out_bytes=nd["out_bytes"],
+                    out_elems=nd["out_elems"],
+                    pu_type=PUType(nd["pu_type"]),
+                    fused_act=nd.get("fused_act"),
+                    meta=nd.get("meta", {}),
+                )
+            )
+        for s, d in raw["edges"]:
+            mt.add_edge(s, d)
+        mt.tenants = list(raw["tenants"])
+        mt._id_map = {t: {int(k): v for k, v in m.items()}
+                      for t, m in raw["id_map"].items()}
+        mt._tenant_nodes = {t: sorted(m.values())
+                            for t, m in mt._id_map.items()}
+        return mt

@@ -12,12 +12,14 @@ from typing import Callable, Dict, Optional
 from ..cost import CostModel
 from .base import Assignment, ScheduleError, Scheduler
 from .lblp import LBLPScheduler
+from .lblp_mt import LBLPMTScheduler
 from .rd import RDScheduler
 from .rr import RRScheduler
 from .wb import WBScheduler
 
 _REGISTRY: Dict[str, Callable[..., Scheduler]] = {
     "lblp": LBLPScheduler,
+    "lblp-mt": LBLPMTScheduler,
     "wb": WBScheduler,
     "rr": RRScheduler,
     "rd": RDScheduler,
@@ -61,6 +63,7 @@ __all__ = [
     "ScheduleError",
     "Scheduler",
     "LBLPScheduler",
+    "LBLPMTScheduler",
     "WBScheduler",
     "RRScheduler",
     "RDScheduler",

@@ -59,6 +59,28 @@ class Assignment:
         """max per-PU load == steady-state pipeline interval (1/rate)."""
         return max(self.load(g, cm).values())
 
+    # -- multi-tenant aggregates -------------------------------------------
+    def tenant_load(self, g: Graph, cm: CostModel) -> Dict[str, Dict[int, float]]:
+        """Per-tenant, per-PU assigned execution time.
+
+        On a :class:`~repro.core.graph.MultiTenantGraph` tenants come from
+        the node tags; a plain single-model graph reports one tenant under
+        its own name.  Summing over tenants recovers :meth:`load` exactly.
+        """
+        out: Dict[str, Dict[int, float]] = {}
+        for nid, pid in self.mapping.items():
+            tenant = g.nodes[nid].meta.get("tenant", g.name)
+            pu = self.pu_by_id(pid)
+            per_pu = out.setdefault(tenant, {p.pu_id: 0.0 for p in self.pus})
+            per_pu[pid] += cm.time(g.nodes[nid], pu.pu_type, pu.speed)
+        return out
+
+    def tenant_bottleneck(self, g: Graph, cm: CostModel) -> Dict[str, float]:
+        """Per-tenant max per-PU load: each tenant's own pipeline-interval
+        lower bound if it ran alone on the fleet slice it was given."""
+        return {t: max(per_pu.values())
+                for t, per_pu in self.tenant_load(g, cm).items()}
+
     def validate(self, g: Graph, cm: CostModel,
                  check_capacity: bool = True) -> None:
         """Raise unless the mapping is executable on the fleet."""
@@ -109,6 +131,35 @@ class Scheduler:
     def _fits(self, node: Node, pu: PUSpec, assigned_weights: Mapping[int, float]) -> bool:
         cap = pu.capacity(self.cm.profile)
         return assigned_weights.get(pu.pu_id, 0.0) + node.weight_bytes <= cap * (1 + 1e-9)
+
+    def _assign_min_load(self, node: Node, candidates: Sequence[PUSpec],
+                         mapping: Dict[int, int], load: Dict[int, float],
+                         weights: Dict[int, float], spills: List[int],
+                         conflicts=None) -> None:
+        """Min-load greedy placement with the LBLP capacity-waiver contract:
+        a node no PU can hold is still assigned (the emulator spills its
+        weights to DRAM) and recorded in ``spills``.  ``conflicts(a, b)``
+        optionally marks node pairs to keep on different PUs when possible
+        (the parallel-branch constraint; callers scope the predicate)."""
+        pool = [p for p in candidates if self._fits(node, p, weights)]
+        if not pool:
+            pool = list(candidates)  # capacity waiver (spill)
+            spills.append(node.node_id)
+        if conflicts is not None:
+            free = [
+                p for p in pool
+                if not any(
+                    conflicts(node.node_id, other)
+                    for other, pid in mapping.items()
+                    if pid == p.pu_id
+                )
+            ]
+            if free:
+                pool = free
+        best = min(pool, key=lambda p: (load[p.pu_id], p.pu_id))
+        mapping[node.node_id] = best.pu_id
+        load[best.pu_id] += self.cm.time(node, best.pu_type, best.speed)
+        weights[best.pu_id] += node.weight_bytes
 
 
 def split_fleet(pus: Sequence[PUSpec]) -> Dict[PUType, List[PUSpec]]:

@@ -47,28 +47,12 @@ class LBLPScheduler(Scheduler):
         lp = g.longest_path(lambda n: cm.time(n))
         lp_set = set(lp)
 
+        # prefer PUs holding no node parallel to this one
+        conflicts = g.is_parallel if self.branch_constraint else None
+
         def assign(node: Node, candidates: List[PUSpec]) -> None:
-            """Min-load greedy with capacity + optional branch separation."""
-            pool = [p for p in candidates if self._fits(node, p, weights)]
-            if not pool:
-                pool = list(candidates)  # capacity waiver (spill)
-                spills.append(node.node_id)
-            if self.branch_constraint:
-                # prefer PUs holding no node parallel to this one
-                free = [
-                    p for p in pool
-                    if not any(
-                        g.is_parallel(node.node_id, other)
-                        for other, pid in mapping.items()
-                        if pid == p.pu_id
-                    )
-                ]
-                if free:
-                    pool = free
-            best = min(pool, key=lambda p: (load[p.pu_id], p.pu_id))
-            mapping[node.node_id] = best.pu_id
-            load[best.pu_id] += cm.time(node, best.pu_type, best.speed)
-            weights[best.pu_id] += node.weight_bytes
+            self._assign_min_load(node, candidates, mapping, load, weights,
+                                  spills, conflicts)
 
         # Steps 2-3: LP nodes, per type, descending execution time.
         lp_nodes = [g.nodes[n] for n in lp if not g.nodes[n].is_free()]

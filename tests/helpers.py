@@ -1,11 +1,60 @@
-"""Shared test utilities: random deployment-graph strategies."""
+"""Shared test utilities: random deployment-graph strategies.
+
+``hypothesis`` is an optional test dependency (``pip install .[test]``).
+When it is absent the property tests must not break collection, so this
+module exports drop-in ``given`` / ``settings`` / ``st`` shims: the
+decorated tests are collected normally and skip with a clear reason.
+Deterministic tests built on :func:`build_random_graph` run either way.
+"""
 
 from __future__ import annotations
 
 import random
 from typing import List, Tuple
 
-from hypothesis import strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade gracefully: collect, then skip
+    HAVE_HYPOTHESIS = False
+    SKIP_REASON = ("hypothesis is not installed — property test skipped "
+                   "(install the [test] extra: pip install .[test])")
+
+    class _StubStrategy:
+        """Placeholder for strategy objects built at import time; supports
+        arbitrary chaining (``st.tuples(...).map(...)``) but never runs."""
+
+        def __call__(self, *a, **kw):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StubStrategy()  # type: ignore[assignment]
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # signature (*a, **kw) on purpose: pytest must not treat the
+            # hypothesis-bound parameters as fixtures.
+            def skipper(*a, **kw):
+                pytest.skip(SKIP_REASON)
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
 
 from repro.core.graph import Graph, OpKind
 

@@ -3,12 +3,11 @@
 
 import networkx as nx
 import pytest
-from hypothesis import given, settings
 
 from repro.core.cost import CostModel
 from repro.core.graph import Graph, GraphError, Node, OpKind, PUType
 
-from helpers import build_random_graph, random_graph_st
+from helpers import build_random_graph, given, random_graph_st, settings
 
 
 def to_networkx(g: Graph, cm: CostModel) -> nx.DiGraph:

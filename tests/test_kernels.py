@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.conv2d import imc_conv2d

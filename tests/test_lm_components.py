@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.models.lm import attention, mlp, moe, rglru, ssm
 from repro.optim import adamw

@@ -1,0 +1,306 @@
+"""Multi-tenant co-scheduling: union graph structure, tenant-aware
+scheduling invariants, per-tenant simulator metrics, elastic re-co-scheduling.
+
+Deterministic seeded tests run everywhere; the hypothesis variants widen
+the same invariants over random unions when the [test] extra is installed.
+"""
+
+import math
+
+import pytest
+
+from repro.core.cost import CostModel, HardwareProfile, make_pus
+from repro.core.elastic import ElasticSession
+from repro.core.graph import GraphError, MultiTenantGraph, OpKind, PUType
+from repro.core.schedulers import available, get_scheduler
+from repro.core.simulator import IMCESimulator, MultiTenantSimulator
+
+from helpers import build_random_graph, given, settings, st
+
+ROOMY = HardwareProfile(name="roomy", pu_weight_capacity=1e12)
+
+ALL_ALGS = [a for a in available() if a != "optimal"]
+
+
+def union_of(seeds, n_nodes=10, density=0.3):
+    return MultiTenantGraph.union(
+        [build_random_graph(n_nodes, density, s) for s in seeds],
+        names=[f"t{s}" for s in seeds],
+    )
+
+
+class TestUnionStructure:
+    def test_tagged_disjoint_union(self):
+        g1 = build_random_graph(8, 0.3, seed=1)
+        g2 = build_random_graph(12, 0.4, seed=2)
+        mt = MultiTenantGraph.union([g1, g2], names=["a", "b"])
+        mt.validate()
+        assert mt.tenants == ["a", "b"]
+        assert len(mt) == len(g1) + len(g2)
+        assert set(mt.tenant_nodes("a")) | set(mt.tenant_nodes("b")) == set(mt.nodes)
+        assert not set(mt.tenant_nodes("a")) & set(mt.tenant_nodes("b"))
+        for t, g in (("a", g1), ("b", g2)):
+            assert len(mt.tenant_sources(t)) == len(g.sources())
+            assert len(mt.tenant_sinks(t)) == len(g.sinks())
+            for nid in mt.tenant_nodes(t):
+                assert mt.tenant_of(nid) == t
+        # edges stay within a tenant (disjoint components)
+        for s, d in mt.edges():
+            assert mt.tenant_of(s) == mt.tenant_of(d)
+        # id remap round-trips
+        for old in g1.nodes:
+            assert mt.tenant_of(mt.union_id("a", old)) == "a"
+
+    def test_duplicate_model_names_deduplicated(self):
+        g = build_random_graph(6, 0.3, seed=3)
+        mt = MultiTenantGraph.union([g, g])
+        assert mt.tenants == [g.name, f"{g.name}#1"]
+
+    def test_duplicate_tenant_tag_rejected(self):
+        g = build_random_graph(4, 0.3, seed=4)
+        mt = MultiTenantGraph.union([g], names=["x"])
+        with pytest.raises(GraphError):
+            mt.add_tenant(g, "x")
+
+    def test_empty_tenant_graph_rejected(self):
+        from repro.core.graph import Graph
+        with pytest.raises(GraphError):
+            MultiTenantGraph.union([Graph("empty"),
+                                    build_random_graph(4, 0.3, seed=9)])
+
+    def test_json_round_trip_preserves_tenants(self):
+        mt = union_of([7, 8])
+        rt = MultiTenantGraph.from_json(mt.to_json())
+        rt.validate()
+        assert rt.tenants == mt.tenants
+        for t in mt.tenants:
+            assert rt.tenant_nodes(t) == mt.tenant_nodes(t)
+            assert rt.tenant_sources(t) == mt.tenant_sources(t)
+        for nid in mt.nodes:
+            assert rt.tenant_of(nid) == mt.tenant_of(nid)
+            # cost-model shape hints survive too
+            assert rt.nodes[nid].meta == mt.nodes[nid].meta
+
+    def test_tenant_longest_path_stays_in_tenant(self):
+        mt = union_of([5, 6])
+        cm = CostModel(ROOMY)
+        for t in mt.tenants:
+            lp = mt.tenant_longest_path(t, lambda n: cm.time(n))
+            assert lp
+            assert all(mt.tenant_of(n) == t for n in lp)
+
+
+class TestMultiTenantScheduling:
+    @pytest.mark.parametrize("alg", ALL_ALGS)
+    def test_complete_and_compatible_on_union(self, alg):
+        cm = CostModel(ROOMY)
+        for seeds in ([11, 12], [13, 14, 15]):
+            mt = union_of(seeds)
+            fleet = make_pus(4, 2)
+            a = get_scheduler(alg, cm).schedule(mt, fleet)
+            a.validate(mt, cm, check_capacity=False)
+            for node in mt.nodes.values():
+                if node.is_free():
+                    continue
+                pu = a.pu_by_id(a.mapping[node.node_id])
+                assert not math.isinf(cm.time(node, pu.pu_type, pu.speed))
+
+    def test_tenant_load_sums_to_load(self):
+        mt = union_of([21, 22, 23])
+        cm = CostModel(ROOMY)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(3, 2))
+        total = a.load(mt, cm)
+        by_tenant = a.tenant_load(mt, cm)
+        assert set(by_tenant) == set(mt.tenants)
+        for pid in total:
+            s = sum(per_pu[pid] for per_pu in by_tenant.values())
+            assert s == pytest.approx(total[pid], rel=1e-9, abs=1e-15)
+
+    def test_lblp_mt_reduces_to_lblp_on_single_model(self):
+        g = build_random_graph(14, 0.3, seed=31)
+        cm = CostModel(ROOMY)
+        fleet = make_pus(3, 2)
+        m_lblp = get_scheduler("lblp", cm).schedule(g, fleet).mapping
+        m_mt = get_scheduler("lblp-mt", cm).schedule(g, fleet).mapping
+        assert m_lblp == m_mt
+
+    def test_every_tenant_lp_gets_spread(self):
+        """Each tenant's critical-path IMC nodes land on distinct PUs (the
+        round-robin interleave gives every tenant LPT-style spreading)."""
+        mt = union_of([41, 42], n_nodes=12)
+        cm = CostModel(ROOMY)
+        fleet = make_pus(4, 2)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, fleet)
+        lps = a.meta["longest_paths"]
+        assert set(lps) == set(mt.tenants)
+        for t, lp in lps.items():
+            typed = [n for n in lp if not mt.nodes[n].is_free()
+                     and mt.nodes[n].pu_type == PUType.IMC]
+            typed.sort(key=lambda n: -cm.time(mt.nodes[n]))
+            k = min(len(typed), 2)  # 2 tenants on 4 IMC PUs -> >= 2 each
+            assert len({a.mapping[n] for n in typed[:k]}) == k
+
+    def test_mt_capacity_spill_recorded_and_assigned(self):
+        """Same waiver contract as single-tenant LBLP: an infeasible node
+        is still mapped, and the spill is recorded."""
+        from repro.core.graph import Graph
+        g1, g2 = Graph("m1"), Graph("m2")
+        for g in (g1, g2):
+            g.add("huge", OpKind.CONV, flops=1e6, weight_bytes=5e6,
+                  out_bytes=1e3, out_elems=1e3,
+                  meta=dict(cin_kk=64, cout=64, n_vectors=64))
+        mt = MultiTenantGraph.union([g1, g2])
+        prof = HardwareProfile(pu_weight_capacity=700e3)
+        cm = CostModel(prof)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(2, 1, prof))
+        assert sorted(a.meta["capacity_spills"]) == sorted(mt.tenant_nodes(mt.tenants[0])
+                                                           + mt.tenant_nodes(mt.tenants[1]))
+        assert set(a.mapping) == set(mt.nodes)  # waiver still assigns
+
+
+class TestMultiTenantSimulator:
+    def _run(self, seeds, n_imc=4, n_dpu=2, frames=32, rates=None):
+        mt = union_of(seeds)
+        cm = CostModel(ROOMY)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(n_imc, n_dpu))
+        sim = MultiTenantSimulator(mt, cm)
+        return mt, sim.run(a, frames=frames, rates=rates)
+
+    def test_rejects_single_tenant_graph(self):
+        g = build_random_graph(6, 0.3, seed=51)
+        with pytest.raises(TypeError):
+            MultiTenantSimulator(g, CostModel(ROOMY))
+
+    def test_per_tenant_metrics_sum_consistently(self):
+        mt, r = self._run([52, 53], frames=32)
+        assert set(r.tenants) == set(mt.tenants)
+        # every tenant completed every injected frame
+        for m in r.tenants.values():
+            assert m.frames == 32
+            assert m.rate > 0 and m.latency > 0
+        assert r.frames == sum(m.frames for m in r.tenants.values())
+        # tenant-attributed busy partitions the fleet's busy seconds
+        for pid, total in r.busy.items():
+            s = sum(m.busy.get(pid, 0.0) for m in r.tenants.values())
+            assert s == pytest.approx(total, rel=1e-9, abs=1e-12)
+        # utilization shares form a distribution
+        shares = [m.utilization_share for m in r.tenants.values()]
+        assert all(0.0 <= x <= 1.0 + 1e-9 for x in shares)
+        assert sum(shares) == pytest.approx(1.0, abs=1e-9)
+        # aggregate throughput ~ sum of tenant throughputs
+        assert r.rate == pytest.approx(
+            sum(m.rate for m in r.tenants.values()), rel=0.15)
+
+    def test_aggregate_interval_respects_union_bound(self):
+        """One 'round' completes one frame of every tenant, so the analytic
+        max-load bound applies to num_tenants * interval (same estimator
+        tolerance as the single-tenant invariant)."""
+        mt, r = self._run([54, 55], frames=64)
+        assert len(mt.tenants) * r.interval >= r.bound_interval * 0.9
+
+    def test_open_loop_rates_are_independent(self):
+        mt = union_of([56, 57])
+        cm = CostModel(ROOMY)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(4, 2))
+        sim = MultiTenantSimulator(mt, cm)
+        sat = sim.run(a, frames=32)
+        # throttle each tenant to half its saturated rate -> delivered
+        # rate tracks the requested rate, not the saturated one
+        rates = {t: sat.tenants[t].rate * 0.5 for t in mt.tenants}
+        r = sim.run(a, frames=32, rates=rates)
+        for t in mt.tenants:
+            assert r.tenants[t].injected_rate == pytest.approx(rates[t])
+            assert r.tenants[t].rate == pytest.approx(rates[t], rel=0.2)
+            assert r.tenants[t].frames == 32
+
+    def test_rates_must_cover_all_tenants(self):
+        mt = union_of([58, 59])
+        cm = CostModel(ROOMY)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(2, 1))
+        sim = MultiTenantSimulator(mt, cm)
+        with pytest.raises(ValueError):
+            sim.run(a, frames=8, rates={mt.tenants[0]: 100.0})
+
+    def test_deterministic(self):
+        _, r1 = self._run([61, 62], frames=24)
+        _, r2 = self._run([61, 62], frames=24)
+        assert r1.interval == r2.interval
+        assert {t: m.rate for t, m in r1.tenants.items()} == \
+               {t: m.rate for t, m in r2.tenants.items()}
+
+
+class TestCoVsStaticPartition:
+    def test_coscheduling_2p_never_worse_than_half_fleet_split(self):
+        """Identical pair on 2P PUs: co-scheduled aggregate rate matches or
+        beats the better static half-fleet split.  The *optimal*
+        co-schedule can always emulate the partition; greedy lblp-mt can
+        fall short on adversarial random DAGs, so this pins the behaviour
+        on fixed seeds (deterministic) rather than quantifying over all
+        graphs — the CNN-model benchmark covers the realistic shapes."""
+        cm = CostModel(ROOMY)
+        for seed in (71, 37, 73):
+            g = build_random_graph(12, 0.3, seed)
+            # static: each copy alone on half the fleet (2 IMC + 1 DPU)
+            half = make_pus(2, 1)
+            a_half = get_scheduler("lblp", cm).schedule(g, half)
+            r_half = IMCESimulator(g, cm).run(a_half, frames=64)
+            static_total = 2 * r_half.rate  # both halves identical
+            # co-scheduled union on the full fleet (4 IMC + 2 DPU)
+            mt = MultiTenantGraph.union([g, g])
+            a_co = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(4, 2))
+            r_co = MultiTenantSimulator(mt, cm).run(a_co, frames=64)
+            co_total = sum(m.rate for m in r_co.tenants.values())
+            assert co_total >= static_total * 0.95, seed
+
+
+class TestElasticMultiTenant:
+    def test_failure_recoschedules_all_tenants(self):
+        mt = union_of([81, 82])
+        cm = CostModel(ROOMY)
+        sess = ElasticSession(mt, make_pus(4, 2), cost_model=cm)
+        assert sess.algorithm == "lblp-mt"
+        e0 = sess.history[0]
+        assert set(e0.tenant_rates) == set(mt.tenants)
+        ev = sess.fail(2)
+        assert ev.n_pus == 5
+        # the whole union is re-placed on survivors in one pass
+        assert set(ev.mapping) == set(e0.mapping)
+        assert 2 not in set(ev.mapping.values())
+        assert set(ev.tenant_rates) == set(mt.tenants)
+        assert all(r > 0 for r in ev.tenant_rates.values())
+
+
+# -- property-based widening (skipped cleanly without hypothesis) -----------
+
+two_seeds_st = st.tuples(st.integers(0, 5000), st.integers(5001, 10_000))
+
+
+class TestProperties:
+    @given(seeds=two_seeds_st, n_imc=st.integers(1, 4),
+           alg=st.sampled_from(ALL_ALGS))
+    @settings(max_examples=60, deadline=None)
+    def test_schedulers_complete_on_random_unions(self, seeds, n_imc, alg):
+        cm = CostModel(ROOMY)
+        mt = union_of(list(seeds), n_nodes=8)
+        a = get_scheduler(alg, cm).schedule(mt, make_pus(n_imc, 2))
+        a.validate(mt, cm, check_capacity=False)
+
+    @given(seeds=two_seeds_st)
+    @settings(max_examples=20, deadline=None)
+    def test_tenant_busy_partitions_fleet_busy(self, seeds):
+        cm = CostModel(ROOMY)
+        mt = union_of(list(seeds), n_nodes=8)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(3, 2))
+        r = MultiTenantSimulator(mt, cm).run(a, frames=16)
+        for pid, total in r.busy.items():
+            s = sum(m.busy.get(pid, 0.0) for m in r.tenants.values())
+            assert s == pytest.approx(total, rel=1e-9, abs=1e-12)
+
+    @given(seeds=two_seeds_st)
+    @settings(max_examples=20, deadline=None)
+    def test_mt_interval_respects_bound(self, seeds):
+        cm = CostModel(ROOMY)
+        mt = union_of(list(seeds), n_nodes=8)
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(3, 2))
+        r = MultiTenantSimulator(mt, cm).run(a, frames=48)
+        assert len(mt.tenants) * r.interval >= r.bound_interval * 0.9

@@ -4,8 +4,7 @@ load-balance quality, determinism."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.core.cost import CostModel, HardwareProfile, PUSpec, make_pus
 from repro.core.graph import Graph, OpKind, PUType
@@ -82,6 +81,32 @@ class TestLBLP:
         assert a.meta["capacity_spills"] == [1]
         with pytest.raises(ScheduleError):
             a.validate(g, cm, check_capacity=True)
+
+    def test_spill_regression_records_and_assigns_every_node(self):
+        """Pins the capacity-spill contract: when the fleet cannot hold a
+        node, LBLP waives capacity (the emulator spills to DRAM), records
+        the node id in meta["capacity_spills"], and STILL assigns it —
+        the mapping stays complete, and nodes that do fit never spill."""
+        g = Graph()
+        prev = None
+        # 3 oversize nodes (spill) interleaved with 3 that fit
+        for i, w in enumerate([5e6, 10e3, 5e6, 10e3, 5e6, 10e3]):
+            n = g.add(f"c{i}", OpKind.CONV, flops=1e6, weight_bytes=w,
+                      out_bytes=1e3, out_elems=1e3,
+                      meta=dict(cin_kk=64, cout=64, n_vectors=64))
+            if prev is not None:
+                g.add_edge(prev, n.node_id)
+            prev = n.node_id
+        prof = HardwareProfile(pu_weight_capacity=700e3)
+        cm = CostModel(prof)
+        a = LBLPScheduler(cm).schedule(g, make_pus(2, 1, prof))
+        assert sorted(a.meta["capacity_spills"]) == [1, 3, 5]
+        assert set(a.mapping) == set(g.nodes)  # waiver still assigns
+        # waived nodes still land on a type-compatible PU
+        for nid in (1, 3, 5):
+            pu = a.pu_by_id(a.mapping[nid])
+            assert pu.pu_type == PUType.IMC
+        a.validate(g, cm, check_capacity=False)
 
     @given(seed=st.integers(0, 500), n=st.integers(4, 20),
            n_imc=st.integers(1, 5))

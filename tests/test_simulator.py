@@ -4,8 +4,7 @@ analytic pipeline bound, utilization sanity, determinism."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.core.cost import CostModel, HardwareProfile, make_pus
 from repro.core.graph import Graph, OpKind
