@@ -1,7 +1,7 @@
 """Beyond-paper: elastic rescheduling degradation curve — rate/latency
 after successive PU failures, LBLP vs static (no-reschedule) baseline."""
 
-from repro.core import CostModel, IMCESimulator, get_scheduler, make_pus
+from repro.core import CostModel, make_pus
 from repro.core.elastic import ElasticSession
 from repro.models.cnn.graphs import resnet18_graph
 

@@ -9,7 +9,6 @@ balance.  Reported: per-stage load imbalance (max/mean) for both."""
 
 from repro.configs import all_archs, get_config
 from repro.core.pipeline_partition import partition, transformer_block_graph
-from repro.core.cost import CostModel
 
 from .common import csv_line, dump
 

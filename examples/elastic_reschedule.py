@@ -25,8 +25,8 @@ def main() -> None:
     print(f"spare IMC PU joined -> {ev.n_pus} PUs rate={ev.rate:.0f} fps")
 
     print("\ndegradation curve (n_pus, rate, latency_ms):")
-    for n, r, l in sess.degradation_curve():
-        print(f"  {n:3d}  {r:8.0f}  {l*1e3:8.2f}")
+    for n, r, lat in sess.degradation_curve():
+        print(f"  {n:3d}  {r:8.0f}  {lat*1e3:8.2f}")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,7 @@ def main() -> None:
                                rtol=1e-5, atol=1e-5)
     agree = float(jnp.mean((jnp.argmax(y_float, -1)
                             == jnp.argmax(y_int8, -1)).astype(jnp.float32)))
-    print(f"  float graph == reference model: exact")
+    print("  float graph == reference model: exact")
     print(f"  INT8 top-1 agreement vs float : {agree*100:.0f}%")
 
 

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 from importlib import import_module
-from typing import Dict
 
 from .base import GLOBAL_WINDOW, LMConfig, Segment, ShapeSpec, SHAPES, \
     shape_supported

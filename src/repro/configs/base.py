@@ -16,8 +16,7 @@ multiple sub-blocks of different types.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 GLOBAL_WINDOW = 1 << 30     # "window" value meaning full/global attention

@@ -18,6 +18,7 @@ from .schedulers import (
     Scheduler,
     available,
     get_scheduler,
+    schedule_replicated,
 )
 from .simulator import (
     IMCESimulator,
@@ -47,6 +48,7 @@ __all__ = [
     "Scheduler",
     "available",
     "get_scheduler",
+    "schedule_replicated",
     "IMCESimulator",
     "MultiTenantSimulator",
     "SimResult",

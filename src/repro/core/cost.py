@@ -40,8 +40,8 @@ calibrations; ``IMCE_DEFAULT`` approximates the NeuroSoC-class emulator
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
 
 from .graph import Graph, Node, OpKind, PUType
 
@@ -140,6 +140,17 @@ class CostModel:
         if pu_type is PUType.IMC:
             return math.inf
         return node.out_elems / p.dpu_elem_rate + p.dpu_setup
+
+    def frame_time(self, node: Node, pu_type: Optional[PUType] = None,
+                   speed: float = 1.0) -> float:
+        """Per-frame amortized execution time (LRMP accounting).
+
+        A node replicated ``k``-way serves every k-th frame round-robin, so
+        each replica contributes ``time/k`` to its PU's steady-state
+        per-frame load; the max-per-PU sum of these is the pipeline
+        interval bound.  Identical to :meth:`time` for unreplicated nodes.
+        """
+        return self.time(node, pu_type, speed) / node.replica_count
 
     def _imc_time(self, node: Node) -> float:
         p = self.profile

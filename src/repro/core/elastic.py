@@ -6,6 +6,17 @@ the surviving PU set the moment a PU drops, and reconfigure.  The same
 policy drives the LM tier's stage re-partitioning when a device group is
 lost (core.pipeline_partition).
 
+Replica absorption (LRMP-style fast path)
+-----------------------------------------
+When the serving schedule carries layer replicas (``lblp-r``), a failed
+PU whose every node is a replica with a surviving sibling does not need
+a re-schedule at all: the dropped replicas' frames simply re-divide
+round-robin over the survivors (``Graph.drop_replica``), the rest of
+the mapping is untouched, and the fleet keeps serving at the amortized
+degraded rate.  Only when a sole copy of some node dies does the
+session fall back to a full re-schedule.  ``ElasticEvent.recovery``
+records which path ran.
+
 ``ElasticSession`` tracks the live fleet, produces assignments, and
 reports the degradation curve (rate/latency after each failure) — see
 benchmarks/elastic_bench.py and examples/elastic_reschedule.py.
@@ -13,7 +24,7 @@ benchmarks/elastic_bench.py and examples/elastic_reschedule.py.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cost import CostModel, PUSpec
@@ -33,6 +44,9 @@ class ElasticEvent:
     #: MultiTenantGraph — one PU failure re-co-schedules *all* tenants.
     tenant_rates: Optional[Dict[str, float]] = None
     tenant_latencies: Optional[Dict[str, float]] = None
+    #: how the fleet recovered: "schedule" (full re-run of the scheduler)
+    #: or "replica-absorb" (surviving replicas soaked up the failed PU)
+    recovery: str = "schedule"
 
 
 class ElasticSession:
@@ -54,31 +68,79 @@ class ElasticSession:
         if not self.live:
             raise RuntimeError("no surviving PUs")
         sched = get_scheduler(self.algorithm, self.cm)
-        self.assignment: Assignment = sched.schedule(self.g, self.live)
-        sim_cls = MultiTenantSimulator if self._multi else IMCESimulator
-        sim = sim_cls(self.g, self.cm)
-        res: SimResult = sim.run(self.assignment, frames=64)
+        a: Assignment = sched.schedule(self.g, self.live)
+        # graph-transforming schedulers (lblp-r) serve a derived graph
+        serving = a.meta.get("replicated_graph", self.g)
+        self._record(failed, serving, a, recovery="schedule")
+
+    def _record(self, failed: Optional[int], serving: Graph,
+                a: Assignment, recovery: str) -> None:
+        self.serving_graph: Graph = serving
+        self.assignment = a
+        sim_cls = (MultiTenantSimulator
+                   if isinstance(serving, MultiTenantGraph) else IMCESimulator)
+        res: SimResult = sim_cls(serving, self.cm).run(a, frames=64)
         self.history.append(ElasticEvent(
             failed_pu=failed,
             n_pus=len(self.live),
             rate=res.rate,
             latency=res.latency,
-            mapping=dict(self.assignment.mapping),
+            mapping=dict(a.mapping),
             tenant_rates=({t: m.rate for t, m in res.tenants.items()}
                           if res.tenants else None),
             tenant_latencies=({t: m.latency for t, m in res.tenants.items()}
                               if res.tenants else None),
+            recovery=recovery,
         ))
+
+    def _absorb(self, pu_id: int) -> bool:
+        """Replica fast path: if every node on the failed PU is a replica
+        with a surviving sibling, drop those replicas (their frames
+        re-divide round-robin over the siblings) and keep the rest of the
+        mapping untouched — no scheduler run."""
+        a, g = self.assignment, self.serving_graph
+        victims = [nid for nid, pid in a.mapping.items() if pid == pu_id]
+        if not victims:
+            return False
+        groups = g.replica_groups()
+        victim_set = set(victims)
+        for nid in victims:
+            grp = g.nodes[nid].replica_group
+            if grp is None:
+                return False
+            if not any(m not in victim_set for m in groups[grp]):
+                return False  # the whole group died with the PU
+        g2 = g
+        for nid in victims:
+            g2 = g2.drop_replica(nid)
+        survivors = [p for p in a.pus if p.pu_id != pu_id]
+        new_a = Assignment(
+            mapping={n: p for n, p in a.mapping.items() if n not in victim_set},
+            pus=survivors,
+            algorithm=a.algorithm,
+            meta={**a.meta, "replicated_graph": g2,
+                  "replicas": {b: len(ms)
+                               for b, ms in g2.replica_groups().items()},
+                  "absorbed_pu": pu_id, "dropped_replicas": sorted(victims)},
+        )
+        # the survivors' amortized load rose: refresh the derived figures
+        # copied from the pre-failure schedule
+        new_a.meta["bound_interval"] = max(new_a.load(g2, self.cm).values())
+        new_a.meta["extra_replicas"] = sum(
+            len(ms) - 1 for ms in g2.replica_groups().values())
+        self._record(pu_id, g2, new_a, recovery="replica-absorb")
+        return True
 
     # -- public API ------------------------------------------------------
     def fail(self, pu_id: int) -> ElasticEvent:
-        """A PU died: reschedule everything it was running."""
+        """A PU died: absorb its load into surviving replicas if possible,
+        otherwise reschedule everything it was running."""
         before = len(self.live)
         self.live = [p for p in self.live if p.pu_id != pu_id]
         if len(self.live) == before:
             raise KeyError(f"PU {pu_id} not in live set")
-        # feasibility: at least one PU of each required type must survive
-        self._schedule(failed=pu_id)
+        if not self._absorb(pu_id):
+            self._schedule(failed=pu_id)
         return self.history[-1]
 
     def join(self, pu: PUSpec) -> ElasticEvent:

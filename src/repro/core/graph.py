@@ -118,6 +118,23 @@ class Node:
     def is_free(self) -> bool:
         return self.kind in FREE_KINDS
 
+    # -- replication (LRMP-style round-robin layer replicas) ---------------
+    @property
+    def replica_count(self) -> int:
+        """Size of this node's replica group (1 = unreplicated)."""
+        return int(self.meta.get("replica_count") or 1)
+
+    @property
+    def replica_index(self) -> Optional[int]:
+        """This node's slot in its replica group (None = unreplicated).
+        Replica ``i`` of a ``k``-group serves frames with ``f % k == i``."""
+        return self.meta.get("replica_index")
+
+    @property
+    def replica_group(self) -> Optional[int]:
+        """Base-graph node id of this node's replica group, if any."""
+        return self.meta.get("replica_group")
+
 
 class GraphError(ValueError):
     pass
@@ -292,6 +309,126 @@ class Graph:
         ia, ib = self._anc_idx[a], self._anc_idx[b]
         return not (anc[b] >> ia) & 1 and not (anc[a] >> ib) & 1
 
+    # -- replication (paper-adjacent: LRMP, arXiv:2312.03146) ----------------
+    def copy(self) -> "Graph":
+        """Structural copy: fresh ``Node`` objects with independent meta
+        dicts, same ids and edges.  Subclasses extend via :meth:`_copy_into`."""
+        g = type(self)(self.name)
+        self._copy_into(g)
+        return g
+
+    def _copy_into(self, g: "Graph") -> None:
+        for nid in sorted(self.nodes):
+            n = self.nodes[nid]
+            g.add_node(Node(
+                node_id=n.node_id, name=n.name, kind=n.kind, flops=n.flops,
+                weight_bytes=n.weight_bytes, out_bytes=n.out_bytes,
+                out_elems=n.out_elems, pu_type=n.pu_type,
+                fused_act=n.fused_act, meta=dict(n.meta),
+            ))
+        for s, d in self.edges():
+            g.add_edge(s, d)
+
+    def replicate(self, node_id: int, k: int) -> "Graph":
+        """Return a copy where ``node_id`` is cloned into ``k`` round-robin
+        replicas (LRMP-style layer replication for bottleneck stages).
+
+        Replica ``i`` executes the frames with ``f % k == i``: the simulator
+        splits the frame stream round-robin across the group and merges the
+        results at the consumers.  Every replica carries the node's full
+        weight footprint (weights are duplicated across crossbars) but only
+        ``1/k`` of the per-frame compute, which is what
+        ``CostModel.frame_time`` charges.
+        """
+        if k < 1:
+            raise GraphError(f"replica count must be >= 1, got {k}")
+        node = self.nodes[node_id]  # unknown id -> KeyError
+        if node.is_free():
+            raise GraphError(f"cannot replicate structural node {node_id}")
+        if node.replica_index is not None:
+            raise GraphError(
+                f"node {node_id} is already replicated; apply counts to the "
+                "base graph instead (Graph.with_replicas)")
+        g = self.copy()
+        if k == 1:
+            return g
+        base = g.nodes[node_id]
+        base.meta.update(replica_group=node_id, replica_index=0,
+                         replica_count=k)
+        preds = g.predecessors(node_id)
+        succs = g.successors(node_id)
+        for i in range(1, k):
+            rid = max(g.nodes) + 1
+            g.add_node(Node(
+                node_id=rid, name=f"{node.name}@r{i}", kind=node.kind,
+                flops=node.flops, weight_bytes=node.weight_bytes,
+                out_bytes=node.out_bytes, out_elems=node.out_elems,
+                pu_type=node.pu_type, fused_act=node.fused_act,
+                meta={**dict(node.meta), "replica_group": node_id,
+                      "replica_index": i, "replica_count": k},
+            ))
+            for p in preds:
+                g.add_edge(p, rid)
+            for s in succs:
+                g.add_edge(rid, s)
+            g._on_replica_added(node_id, rid)
+        return g
+
+    def _on_replica_added(self, base_id: int, replica_id: int) -> None:
+        """Bookkeeping hook for subclasses (tenant registries etc.)."""
+
+    def with_replicas(self, counts: Dict[int, int]) -> "Graph":
+        """Apply several replications at once: ``counts`` maps base node id
+        to total replica count (entries of 1 are no-ops).  Always returns a
+        copy, so callers can derive variants from one pristine graph."""
+        g: "Graph" = self
+        for nid in sorted(counts):
+            if counts[nid] > 1:
+                g = g.replicate(nid, counts[nid])
+        return g.copy() if g is self else g
+
+    def replica_groups(self) -> Dict[int, List[int]]:
+        """Base node id -> sorted member ids, replicated groups only."""
+        groups: Dict[int, List[int]] = {}
+        for nid, n in self.nodes.items():
+            if n.replica_group is not None:
+                groups.setdefault(n.replica_group, []).append(nid)
+        return {b: sorted(ms) for b, ms in groups.items()}
+
+    def drop_replica(self, node_id: int) -> "Graph":
+        """Return a copy with replica ``node_id`` removed from its group.
+
+        Survivors are re-indexed ``0..k-2`` (count ``k-1``); a group reduced
+        to one member loses its replica tags entirely.  The elastic tier
+        uses this to absorb a failed PU's replicated nodes without a full
+        re-schedule.
+        """
+        node = self.nodes[node_id]
+        if node.replica_group is None:
+            raise GraphError(f"node {node_id} is not a replica")
+        g = self.copy()
+        members = [m for m in g.replica_groups()[node.replica_group]
+                   if m != node_id]
+        g._remove_node(node_id)
+        members.sort(key=lambda m: g.nodes[m].meta["replica_index"])
+        for i, m in enumerate(members):
+            meta = g.nodes[m].meta
+            if len(members) == 1:
+                for key in ("replica_group", "replica_index", "replica_count"):
+                    meta.pop(key, None)
+            else:
+                meta["replica_index"] = i
+                meta["replica_count"] = len(members)
+        return g
+
+    def _remove_node(self, nid: int) -> None:
+        for p in self._pred[nid]:
+            self._succ[p].remove(nid)
+        for s in self._succ[nid]:
+            self._pred[s].remove(nid)
+        del self.nodes[nid], self._succ[nid], self._pred[nid]
+        self._invalidate()
+
     def depth_levels(self) -> Dict[int, int]:
         """ASAP level of every node (hop count, used by RR tie-breaks)."""
         lvl: Dict[int, int] = {}
@@ -316,6 +453,7 @@ class Graph:
                         "out_elems": n.out_elems,
                         "pu_type": n.pu_type.value,
                         "fused_act": n.fused_act,
+                        "meta": n.meta,
                     }
                     for n in self.nodes.values()
                 ],
@@ -340,6 +478,7 @@ class Graph:
                     out_elems=nd["out_elems"],
                     pu_type=PUType(nd["pu_type"]),
                     fused_act=nd.get("fused_act"),
+                    meta=nd.get("meta", {}),
                 )
             )
         for s, d in raw["edges"]:
@@ -432,6 +571,29 @@ class MultiTenantGraph(Graph):
         self._id_map[tenant] = remap
         return tenant
 
+    # -- replication bookkeeping -------------------------------------------
+    def copy(self) -> "MultiTenantGraph":
+        mt: MultiTenantGraph = super().copy()  # type: ignore[assignment]
+        mt.tenants = list(self.tenants)
+        mt._tenant_nodes = {t: list(ns) for t, ns in self._tenant_nodes.items()}
+        mt._id_map = {t: dict(m) for t, m in self._id_map.items()}
+        return mt
+
+    def _on_replica_added(self, base_id: int, replica_id: int) -> None:
+        tenant = self.nodes[base_id].meta.get("tenant")
+        if tenant is not None:
+            # replica ids are allocated past max(nodes): append keeps order
+            self._tenant_nodes[tenant].append(replica_id)
+
+    def _remove_node(self, nid: int) -> None:
+        tenant = self.nodes[nid].meta.get("tenant")
+        super()._remove_node(nid)
+        if tenant is not None and tenant in self._tenant_nodes:
+            self._tenant_nodes[tenant] = [
+                n for n in self._tenant_nodes[tenant] if n != nid]
+            self._id_map[tenant] = {
+                k: v for k, v in self._id_map[tenant].items() if v != nid}
+
     # -- per-tenant queries ------------------------------------------------
     def tenant_of(self, nid: int) -> str:
         node = self.nodes[nid]  # unknown id -> KeyError, not a tag error
@@ -464,10 +626,9 @@ class MultiTenantGraph(Graph):
 
     # -- (de)serialization: tenant structure must survive the round-trip ----
     def to_json(self) -> str:
+        # node meta (tenant tags, replica tags, cost hints) is already
+        # serialized by the base class
         raw = json.loads(super().to_json())
-        # node meta carries the tenant tag (plus cost-model shape hints)
-        for nd in raw["nodes"]:
-            nd["meta"] = self.nodes[nd["id"]].meta
         raw["tenants"] = list(self.tenants)
         raw["id_map"] = self._id_map
         return json.dumps(raw, indent=2)
@@ -496,6 +657,11 @@ class MultiTenantGraph(Graph):
         mt.tenants = list(raw["tenants"])
         mt._id_map = {t: {int(k): v for k, v in m.items()}
                       for t, m in raw["id_map"].items()}
-        mt._tenant_nodes = {t: sorted(m.values())
-                            for t, m in mt._id_map.items()}
+        # rebuild from the node tags, not _id_map: replicas added after
+        # union-time are tenant members without a tenant-local id
+        mt._tenant_nodes = {
+            t: sorted(nid for nid, n in mt.nodes.items()
+                      if n.meta.get("tenant") == t)
+            for t in mt.tenants
+        }
         return mt

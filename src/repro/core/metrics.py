@@ -9,7 +9,7 @@ collections of ``SimResult``s the same way.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Mapping, Sequence
+from typing import Dict, Mapping
 
 from .simulator import SimResult
 

@@ -20,7 +20,7 @@ vs unrestricted LBLP is reported so the effect is visible.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List
 
 from repro.configs.base import LMConfig
 

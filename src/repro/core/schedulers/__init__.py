@@ -13,6 +13,7 @@ from ..cost import CostModel
 from .base import Assignment, ScheduleError, Scheduler
 from .lblp import LBLPScheduler
 from .lblp_mt import LBLPMTScheduler
+from .lblp_r import LBLPRScheduler, schedule_replicated
 from .rd import RDScheduler
 from .rr import RRScheduler
 from .wb import WBScheduler
@@ -20,6 +21,7 @@ from .wb import WBScheduler
 _REGISTRY: Dict[str, Callable[..., Scheduler]] = {
     "lblp": LBLPScheduler,
     "lblp-mt": LBLPMTScheduler,
+    "lblp-r": LBLPRScheduler,
     "wb": WBScheduler,
     "rr": RRScheduler,
     "rd": RDScheduler,
@@ -64,10 +66,12 @@ __all__ = [
     "Scheduler",
     "LBLPScheduler",
     "LBLPMTScheduler",
+    "LBLPRScheduler",
     "WBScheduler",
     "RRScheduler",
     "RDScheduler",
     "get_scheduler",
     "register",
     "available",
+    "schedule_replicated",
 ]

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence
 
 from ..cost import CostModel, PUSpec
-from ..graph import Graph, Node, OpKind, PUType
+from ..graph import Graph, Node, PUType
 
 
 class ScheduleError(ValueError):
@@ -40,16 +40,35 @@ class Assignment:
                 return p
         raise KeyError(pu_id)
 
+    def resolve_graph(self, g: Graph) -> Graph:
+        """The graph this mapping actually refers to.
+
+        Graph-transforming schedulers (lblp-r layer replication) map node
+        ids of a derived graph stored in ``meta["replicated_graph"]``;
+        when a caller passes the base graph, substitute the derived one so
+        loads and validation see every mapped node."""
+        rg = self.meta.get("replicated_graph")
+        if rg is not None and any(nid not in g.nodes for nid in self.mapping):
+            return rg
+        return g
+
     # -- static per-PU aggregates ------------------------------------------
     def load(self, g: Graph, cm: CostModel) -> Dict[int, float]:
-        """Total assigned execution time per PU (the paper's load)."""
+        """Per-frame assigned execution time per PU (the paper's load).
+
+        Replicated nodes are amortized: a k-way replica serves every k-th
+        frame, contributing ``time/k`` (``CostModel.frame_time``).  On an
+        unreplicated graph this is exactly the paper's total-time load.
+        """
+        g = self.resolve_graph(g)
         out = {p.pu_id: 0.0 for p in self.pus}
         for nid, pid in self.mapping.items():
             pu = self.pu_by_id(pid)
-            out[pid] += cm.time(g.nodes[nid], pu.pu_type, pu.speed)
+            out[pid] += cm.frame_time(g.nodes[nid], pu.pu_type, pu.speed)
         return out
 
     def weights(self, g: Graph) -> Dict[int, float]:
+        g = self.resolve_graph(g)
         out = {p.pu_id: 0.0 for p in self.pus}
         for nid, pid in self.mapping.items():
             out[pid] += g.nodes[nid].weight_bytes
@@ -67,12 +86,13 @@ class Assignment:
         the node tags; a plain single-model graph reports one tenant under
         its own name.  Summing over tenants recovers :meth:`load` exactly.
         """
+        g = self.resolve_graph(g)
         out: Dict[str, Dict[int, float]] = {}
         for nid, pid in self.mapping.items():
             tenant = g.nodes[nid].meta.get("tenant", g.name)
             pu = self.pu_by_id(pid)
             per_pu = out.setdefault(tenant, {p.pu_id: 0.0 for p in self.pus})
-            per_pu[pid] += cm.time(g.nodes[nid], pu.pu_type, pu.speed)
+            per_pu[pid] += cm.frame_time(g.nodes[nid], pu.pu_type, pu.speed)
         return out
 
     def tenant_bottleneck(self, g: Graph, cm: CostModel) -> Dict[str, float]:
@@ -84,6 +104,7 @@ class Assignment:
     def validate(self, g: Graph, cm: CostModel,
                  check_capacity: bool = True) -> None:
         """Raise unless the mapping is executable on the fleet."""
+        g = self.resolve_graph(g)
         unmapped = set(g.nodes) - set(self.mapping)
         unmapped = {n for n in unmapped if not g.nodes[n].is_free()}
         if unmapped:
@@ -158,7 +179,8 @@ class Scheduler:
                 pool = free
         best = min(pool, key=lambda p: (load[p.pu_id], p.pu_id))
         mapping[node.node_id] = best.pu_id
-        load[best.pu_id] += self.cm.time(node, best.pu_type, best.speed)
+        # replicas are amortized (frame_time == time on unreplicated graphs)
+        load[best.pu_id] += self.cm.frame_time(node, best.pu_type, best.speed)
         weights[best.pu_id] += node.weight_bytes
 
 

@@ -21,8 +21,7 @@ branch-and-bound optimum (see benchmarks/scheduler_quality.py).
 
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Sequence
 
 from ..cost import PUSpec
 from ..graph import Graph, Node, PUType
@@ -77,7 +76,9 @@ class LBLPXScheduler(Scheduler):
                 ),
             )
             mapping[node.node_id] = best.pu_id
-            load[best.pu_id] += cm.time(node, best.pu_type, best.speed)
+            # replicas charge amortized steady-state load (time == frame_time
+            # on unreplicated graphs)
+            load[best.pu_id] += cm.frame_time(node, best.pu_type, best.speed)
             weights[best.pu_id] += node.weight_bytes
 
         nodes = schedulable_nodes(g)

@@ -45,7 +45,9 @@ class WBScheduler(Scheduler):
             best = min(pool, key=lambda p: (weights[p.pu_id], p.pu_id))
             mapping[node.node_id] = best.pu_id
             weights[best.pu_id] += node.weight_bytes
-            load[best.pu_id] += cm.time(node, best.pu_type, best.speed)
+            # replicas charge amortized steady-state load (time == frame_time
+            # on unreplicated graphs)
+            load[best.pu_id] += cm.frame_time(node, best.pu_type, best.speed)
 
         # Step 2: DPU nodes by descending execution time -> min-load PU.
         dpu_nodes = sorted(
@@ -56,7 +58,9 @@ class WBScheduler(Scheduler):
             cands = self._compatible(node, pus)
             best = min(cands, key=lambda p: (load[p.pu_id], p.pu_id))
             mapping[node.node_id] = best.pu_id
-            load[best.pu_id] += cm.time(node, best.pu_type, best.speed)
+            # replicas charge amortized steady-state load (time == frame_time
+            # on unreplicated graphs)
+            load[best.pu_id] += cm.frame_time(node, best.pu_type, best.speed)
 
         return Assignment(mapping=mapping, pus=list(pus), algorithm=self.name,
                           meta={"capacity_spills": spills})

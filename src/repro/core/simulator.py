@@ -16,6 +16,28 @@ Model
 * Fused activations cost nothing (inside the PU datapath), matching the
   IMCE.
 
+One event loop
+--------------
+There is exactly one event-loop implementation, ``_run_streams``: it
+executes any number of *frame streams* over the graph.  A plain
+single-model run is the 1-stream special case (``IMCESimulator``); a
+multi-tenant union drives one stream per tenant
+(``MultiTenantSimulator``).  The subclasses differ only in the
+``_stream_view`` they hand the loop and in how ``run`` aggregates the
+results — the ready-queue order for one stream is provably identical to
+the historical single-tenant simulator (the stream's virtual-time key
+``f * weight`` is strictly monotone in ``f`` for a constant weight), and
+``tests/test_sim_equivalence.py`` pins bit-identical results on the
+paper-validation graphs.
+
+Layer replication (LRMP-style)
+------------------------------
+Nodes cloned by ``Graph.replicate(node_id, k)`` carry
+``replica_index``/``replica_count`` tags; the loop routes frame ``f`` to
+replica ``f % k`` (round-robin split) and consumers merge transparently —
+an inactive replica simply does not exist for that frame.  The analytic
+bound uses the amortized per-frame load (``CostModel.frame_time``).
+
 Measurements
 ------------
 * ``latency``   — the paper's latency metric: mean frame *sojourn* time
@@ -32,9 +54,10 @@ Measurements
 * ``utilization`` — per-PU busy fraction over the steady-state window
   (paper Table I).
 
-The analytic pipeline bound ``interval >= max_pu(total busy per frame)``
-is asserted (within epsilon) in tests; LBLP's load balancing minimizes
-exactly that bound.
+The analytic pipeline bound ``interval >= max_pu(amortized busy per
+frame)`` is asserted (within epsilon) in tests; LBLP's load balancing
+minimizes exactly that bound, and LBLP-R lowers it further by
+replicating the bottleneck node.
 """
 
 from __future__ import annotations
@@ -45,7 +68,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .cost import CostModel
-from .graph import Graph, MultiTenantGraph, Node
+from .graph import Graph, MultiTenantGraph
 from .schedulers.base import Assignment
 
 
@@ -75,10 +98,29 @@ class SimResult:
     busy: Dict[int, float]              # pu_id -> busy seconds (whole run)
     utilization: Dict[int, float]       # pu_id -> busy fraction, steady window
     mean_utilization: float
-    per_frame_busy: Dict[int, float]    # pu_id -> busy seconds per frame
+    per_frame_busy: Dict[int, float]    # pu_id -> amortized busy s per frame
     bound_interval: float               # analytic max-load bound
     meta: dict = field(default_factory=dict)
     tenants: Dict[str, TenantMetrics] = field(default_factory=dict)
+
+
+@dataclass
+class _StreamView:
+    """How the event loop sees the graph's frame streams.
+
+    ``IMCESimulator`` exposes one stream spanning the whole graph;
+    ``MultiTenantSimulator`` exposes one per tenant.  ``weight`` is the
+    stream's virtual-time increment per frame (start-time fair queueing);
+    for a single stream any positive constant yields the historical
+    frame-number ordering.
+    """
+
+    streams: List[str]
+    nodes: Dict[str, List[int]]         # stream -> member node ids
+    sources: Dict[str, List[int]]       # stream -> source node ids
+    sinks: Dict[str, List[int]]         # stream -> sink node ids
+    stream_of: Dict[int, str]           # node id -> stream
+    weight: Dict[str, float]            # stream -> virtual-time weight
 
 
 class IMCESimulator:
@@ -145,21 +187,69 @@ class IMCESimulator:
         latency, _, _, _ = self._simulate(assignment, frames=1, in_flight=1)
         return latency
 
+    # -- stream view ----------------------------------------------------------
+    def _stream_view(self, a: Assignment) -> _StreamView:
+        """One stream spanning the whole graph (single-model serving)."""
+        g = self.g
+        key = g.name
+        order = g.topo_order()
+        return _StreamView(
+            streams=[key],
+            nodes={key: order},
+            sources={key: g.sources()},
+            sinks={key: g.sinks()},
+            stream_of={n: key for n in order},
+            weight={key: 1.0},  # one stream: any constant == frame order
+        )
+
     # -- internals -----------------------------------------------------------
     def _per_frame_busy(self, a: Assignment) -> Dict[int, float]:
         out = {p.pu_id: 0.0 for p in a.pus}
         for nid, pid in a.mapping.items():
             pu = a.pu_by_id(pid)
-            out[pid] += self.cm.time(self.g.nodes[nid], pu.pu_type, pu.speed)
+            out[pid] += self.cm.frame_time(self.g.nodes[nid], pu.pu_type, pu.speed)
         return out
 
     def _simulate(self, a: Assignment, frames: int, in_flight: int,
                   ) -> Tuple[float, List[float],
                              Dict[int, List[Tuple[float, float]]], List[float]]:
+        """Single-stream adapter over the shared event loop (kept for the
+        historical return shape: makespan, completions, busy, sojourns).
+        On a multi-stream view every stream gets ``frames`` and the first
+        stream's completions/sojourns are reported."""
+        makespan, completions, busy_iv, sojourns, _ = self._run_streams(
+            a, frames=frames, in_flight=in_flight)
+        first = next(iter(completions))
+        return makespan, completions[first], busy_iv, sojourns[first]
+
+    def _run_streams(
+        self, a: Assignment, frames, in_flight: int,
+        rates: Optional[Dict[str, float]] = None,
+    ) -> Tuple[float, Dict[str, List[float]],
+               Dict[int, List[Tuple[float, float]]],
+               Dict[str, List[float]], Dict[str, Dict[int, float]]]:
+        """THE event loop: stream-keyed frames over one graph.
+
+        A frame instance is ``(stream, f)`` and only traverses the
+        stream's member nodes; replicated nodes additionally serve only
+        the frames of their round-robin slot.  Two injection regimes:
+        closed-loop (bounded in-flight, re-inject on completion) and
+        open-loop (``rates``: frame f injected at ``f / rate``).
+
+        ``frames`` is a per-stream dict, or an int applied to every
+        stream of the view.  Returns ``(makespan, completions-by-stream,
+        busy intervals per PU, sojourns-by-stream,
+        busy-by-stream-by-PU)``.
+        """
         g, cm = self.g, self.cm
+        view = self._stream_view(a)
+        if isinstance(frames, int):
+            frames = {s: frames for s in view.streams}
         order = g.topo_order()
         preds = {n: g.predecessors(n) for n in order}
         succs = {n: g.successors(n) for n in order}
+        streams = view.streams
+
         pu_of = dict(a.mapping)
         # free nodes ride on any PU at zero cost; pin them to a successor's
         # (or predecessor's) PU so transfers are accounted sensibly.
@@ -170,6 +260,16 @@ class IMCESimulator:
                     (pu_of[m] for m in nbr if m in pu_of), a.pus[0].pu_id
                 )
         speed = {p.pu_id: p for p in a.pus}
+
+        # round-robin replica routing: replica i of a k-group exists only
+        # for the frames with f % k == i (Graph.replicate)
+        rep_cnt = {n: g.nodes[n].replica_count for n in order}
+        rep_idx = {n: g.nodes[n].meta.get("replica_index", 0) for n in order}
+        replicated = any(c > 1 for c in rep_cnt.values())
+
+        def active(nid: int, f: int) -> bool:
+            c = rep_cnt[nid]
+            return c == 1 or f % c == rep_idx[nid]
 
         def exec_time(nid: int) -> float:
             node = g.nodes[nid]
@@ -187,72 +287,108 @@ class IMCESimulator:
             heapq.heappush(evq, (t, seq, kind, payload))
             seq += 1
 
-        missing: Dict[Tuple[int, int], int] = {}      # (frame, node) -> inputs left
-        inject_time: Dict[int, float] = {}
-        complete_time: Dict[int, float] = {}
-        ready_q: Dict[int, List[Tuple[int, float, int]]] = {
+        missing: Dict[Tuple[str, int, int], int] = {}   # (stream, f, node)
+        inject_time: Dict[Tuple[str, int], float] = {}
+        complete_time: Dict[Tuple[str, int], float] = {}
+        frame_left: Dict[Tuple[str, int], int] = {}
+        injected = {s: 0 for s in streams}
+        n_sinks = {s: len(view.sinks[s]) for s in streams}
+        ready_q: Dict[int, List[Tuple[float, int, float, int, float]]] = {
             p.pu_id: [] for p in a.pus
         }
         pu_free_at: Dict[int, float] = {p.pu_id: 0.0 for p in a.pus}
         pu_idle: Dict[int, bool] = {p.pu_id: True for p in a.pus}
         busy_iv: Dict[int, List[Tuple[float, float]]] = {p.pu_id: [] for p in a.pus}
-        completions: List[float] = []
-        injected = 0
+        stream_busy: Dict[str, Dict[int, float]] = {
+            s: {p.pu_id: 0.0 for p in a.pus} for s in streams
+        }
+        completions: Dict[str, List[float]] = {s: [] for s in streams}
 
-        def inject(f: int, t: float) -> None:
-            inject_time[f] = t
-            for nid in order:
-                missing[(f, nid)] = len(preds[nid])
-            for nid in g.sources():
-                push(t, "ready", (f, nid))
+        def inject(sn: str, f: int, t: float) -> None:
+            inject_time[(sn, f)] = t
+            if not replicated:
+                frame_left[(sn, f)] = n_sinks[sn]
+                for nid in view.nodes[sn]:
+                    missing[(sn, f, nid)] = len(preds[nid])
+                for nid in view.sources[sn]:
+                    push(t, "ready", (sn, f, nid))
+            else:
+                # per-frame view: inactive replicas do not exist for f
+                sinks = 0
+                for nid in view.nodes[sn]:
+                    if not active(nid, f):
+                        continue
+                    missing[(sn, f, nid)] = sum(
+                        1 for p in preds[nid] if active(p, f))
+                    if not any(active(s, f) for s in succs[nid]):
+                        sinks += 1
+                    if missing[(sn, f, nid)] == 0:
+                        push(t, "ready", (sn, f, nid))
+                frame_left[(sn, f)] = sinks
+            injected[sn] += 1
 
-        def enqueue_ready(f: int, nid: int, t: float) -> None:
+        def enqueue_ready(sn: str, f: int, nid: int, t: float) -> None:
             pid = pu_of[nid]
-            heapq.heappush(ready_q[pid], (f, -self._blevel[nid], nid, t))
+            # virtual time first (cross-stream fairness), then per-stream
+            # frame number and the critical-path tiebreak; for a single
+            # stream this is exactly the historical (f, -blevel, nid) order.
+            heapq.heappush(
+                ready_q[pid],
+                (f * view.weight[sn], f, -self._blevel[nid], nid, t))
             if pu_idle[pid]:
                 push(max(t, pu_free_at[pid]), "dispatch", (pid,))
 
-        def finish(f: int, nid: int, t: float) -> None:
-            """Outputs of (f, nid) forward to successors."""
+        def finish(sn: str, f: int, nid: int, t: float) -> None:
+            """Outputs of (stream, f, nid) forward to successors."""
             node = g.nodes[nid]
-            if not succs[nid]:
-                frame_left[f] -= 1
-                if frame_left[f] == 0:
-                    completions.append(t)
-                    complete_time[f] = t
-                    push(t, "complete", (f,))
+            outs = succs[nid]
+            if replicated:
+                outs = [s for s in outs if active(s, f)]
+            if not outs:
+                frame_left[(sn, f)] -= 1
+                if frame_left[(sn, f)] == 0:
+                    completions[sn].append(t)
+                    complete_time[(sn, f)] = t
+                    push(t, "complete", (sn, f))
                 return
-            for s in succs[nid]:
+            for s in outs:
                 xfer = cm.transfer(node, same_pu=(pu_of[s] == pu_of[nid]))
-                push(t + xfer, "arrive", (f, s))
+                push(t + xfer, "arrive", (sn, f, s))
 
-        sink_set = set(g.sinks())
-        frame_left: Dict[int, int] = {}
-
-        # prime
-        first = min(in_flight, frames)
-        for f in range(first):
-            frame_left[f] = len(sink_set)
-            inject(f, 0.0)
-        injected = first
+        # prime / schedule injections
+        if rates is not None:
+            for sn in streams:
+                r = rates[sn]
+                if r <= 0:
+                    raise ValueError(f"rate for stream '{sn}' must be > 0")
+                for f in range(frames[sn]):
+                    push(f / r, "inject", (sn, f))
+        else:
+            for sn in streams:
+                for f in range(min(in_flight, frames[sn])):
+                    inject(sn, f, 0.0)
 
         makespan = 0.0
         while evq:
             t, _, kind, payload = heapq.heappop(evq)
             makespan = max(makespan, t)
-            if kind == "ready":
-                f, nid = payload
-                enqueue_ready(f, nid, t)
+            if kind == "inject":
+                sn, f = payload
+                inject(sn, f, t)
+            elif kind == "ready":
+                sn, f, nid = payload
+                enqueue_ready(sn, f, nid, t)
             elif kind == "arrive":
-                f, nid = payload
-                missing[(f, nid)] -= 1
-                if missing[(f, nid)] == 0:
-                    push(t, "ready", (f, nid))
+                sn, f, nid = payload
+                missing[(sn, f, nid)] -= 1
+                if missing[(sn, f, nid)] == 0:
+                    push(t, "ready", (sn, f, nid))
             elif kind == "dispatch":
                 (pid,) = payload
                 if not pu_idle[pid] or not ready_q[pid]:
                     continue
-                f, _negbl, nid, _tr = heapq.heappop(ready_q[pid])
+                _vt, f, _negbl, nid, _tr = heapq.heappop(ready_q[pid])
+                sn = view.stream_of[nid]
                 dt = exec_time(nid)
                 pu_idle[pid] = False
                 start = max(t, pu_free_at[pid])
@@ -260,22 +396,25 @@ class IMCESimulator:
                 pu_free_at[pid] = end
                 if dt > 0:
                     busy_iv[pid].append((start, end))
-                push(end, "done", (pid, f, nid))
+                    stream_busy[sn][pid] += dt
+                push(end, "done", (pid, sn, f, nid))
             elif kind == "done":
-                pid, f, nid = payload
+                pid, sn, f, nid = payload
                 pu_idle[pid] = True
-                finish(f, nid, t)
+                finish(sn, f, nid, t)
                 if ready_q[pid]:
                     push(t, "dispatch", (pid,))
             elif kind == "complete":
-                (f,) = payload
-                if injected < frames:
-                    frame_left[injected] = len(sink_set)
-                    inject(injected, t)
-                    injected += 1
-        sojourns = [complete_time[f] - inject_time[f]
-                    for f in sorted(complete_time)]
-        return makespan, sorted(completions), busy_iv, sojourns
+                sn, f = payload
+                if rates is None and injected[sn] < frames[sn]:
+                    inject(sn, injected[sn], t)
+        sojourns = {
+            sn: [complete_time[(sn, f)] - inject_time[(sn, f)]
+                 for f in range(frames[sn]) if (sn, f) in complete_time]
+            for sn in streams
+        }
+        return (makespan, {s: sorted(c) for s, c in completions.items()},
+                busy_iv, sojourns, stream_busy)
 
     @staticmethod
     def _steady_state(completions: List[float]) -> Tuple[float, Tuple[float, float]]:
@@ -306,7 +445,7 @@ class IMCESimulator:
 
 
 class MultiTenantSimulator(IMCESimulator):
-    """Event-driven executor of a co-schedule over a ``MultiTenantGraph``.
+    """Multi-tenant front-end over the shared event loop.
 
     Every tenant receives its own frame stream.  Two injection regimes:
 
@@ -331,6 +470,28 @@ class MultiTenantSimulator(IMCESimulator):
             raise TypeError("MultiTenantSimulator needs a MultiTenantGraph")
         super().__init__(graph, cost_model, max_in_flight)
 
+    # -- stream view ----------------------------------------------------------
+    def _stream_view(self, a: Assignment) -> _StreamView:
+        """One stream per tenant, weighted for start-time fair queueing:
+        a tenant's frame f carries virtual time ``f * (its amortized busy
+        seconds per frame)``.  Ordering ready work by virtual time
+        equalizes *resource* shares instead of completion counts — a light
+        tenant streams several frames per heavy-tenant frame rather than
+        being locked to the heavy tenant's pace (which would cap aggregate
+        rate at n_tenants / heaviest-round)."""
+        g: MultiTenantGraph = self.g  # type: ignore[assignment]
+        tenants = list(g.tenants)
+        tl = a.tenant_load(g, self.cm)
+        return _StreamView(
+            streams=tenants,
+            nodes={t: g.tenant_nodes(t) for t in tenants},
+            sources={t: g.tenant_sources(t) for t in tenants},
+            sinks={t: g.tenant_sinks(t) for t in tenants},
+            stream_of={n: g.tenant_of(n) for n in g.topo_order()},
+            weight={t: max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
+                    for t in tenants},
+        )
+
     # -- public API -----------------------------------------------------------
     def run(self, assignment: Assignment, frames: int = 64,
             rates: Optional[Dict[str, float]] = None) -> SimResult:
@@ -346,7 +507,7 @@ class MultiTenantSimulator(IMCESimulator):
         # scalar is the worst tenant).
         iso_by_tenant: Dict[str, float] = {}
         for t in tenants:
-            mk, *_ = self._simulate_mt(
+            mk, *_ = self._run_streams(
                 assignment, {u: (1 if u == t else 0) for u in tenants},
                 in_flight=1)
             iso_by_tenant[t] = mk
@@ -355,16 +516,16 @@ class MultiTenantSimulator(IMCESimulator):
         if rates is None:
             # double-buffered sojourn latency run (paper's latency metric)
             lat_frames = {t: max(frames // 2, 16) for t in tenants}
-            _, _, _, lat_sojourns, _ = self._simulate_mt(
+            _, _, _, lat_sojourns, _ = self._run_streams(
                 assignment, lat_frames, in_flight=2)
             in_flight = self.max_in_flight or (len(assignment.pus) + 2)
             makespan, completions, busy_iv, sojourns, tenant_busy = \
-                self._simulate_mt(assignment, {t: frames for t in tenants},
+                self._run_streams(assignment, {t: frames for t in tenants},
                                   in_flight=in_flight)
         else:
             in_flight = 0  # open loop: injection is time-driven
             makespan, completions, busy_iv, sojourns, tenant_busy = \
-                self._simulate_mt(assignment, {t: frames for t in tenants},
+                self._run_streams(assignment, {t: frames for t in tenants},
                                   in_flight=0, rates=rates)
             lat_sojourns = sojourns
 
@@ -425,170 +586,3 @@ class MultiTenantSimulator(IMCESimulator):
                   "rates": dict(rates) if rates else None},
             tenants=per_tenant,
         )
-
-    # -- internals -----------------------------------------------------------
-    def _simulate_mt(
-        self, a: Assignment, frames: Dict[str, int], in_flight: int,
-        rates: Optional[Dict[str, float]] = None,
-    ) -> Tuple[float, Dict[str, List[float]],
-               Dict[int, List[Tuple[float, float]]],
-               Dict[str, List[float]], Dict[str, Dict[int, float]]]:
-        """Per-tenant generalization of ``IMCESimulator._simulate``.
-
-        A frame instance is ``(tenant, f)`` and only traverses the
-        tenant's component.  Returns ``(makespan, completions-by-tenant,
-        busy intervals per PU, sojourns-by-tenant, busy-by-tenant-by-PU)``.
-        """
-        g: MultiTenantGraph = self.g  # type: ignore[assignment]
-        cm = self.cm
-        order = g.topo_order()
-        preds = {n: g.predecessors(n) for n in order}
-        succs = {n: g.successors(n) for n in order}
-        tenants = list(g.tenants)
-        t_nodes = {t: g.tenant_nodes(t) for t in tenants}
-        t_sources = {t: g.tenant_sources(t) for t in tenants}
-        t_sinks = {t: set(g.tenant_sinks(t)) for t in tenants}
-        tenant_of = {n: g.tenant_of(n) for n in order}
-
-        pu_of = dict(a.mapping)
-        for nid in order:
-            if nid not in pu_of:
-                nbr = succs[nid] + preds[nid]
-                pu_of[nid] = next(
-                    (pu_of[m] for m in nbr if m in pu_of), a.pus[0].pu_id
-                )
-        speed = {p.pu_id: p for p in a.pus}
-
-        # start-time fair queueing: a tenant's frame f carries virtual time
-        # f * (its busy seconds per frame).  Ordering ready work by virtual
-        # time equalizes *resource* shares instead of completion counts —
-        # a light tenant streams several frames per heavy-tenant frame
-        # rather than being locked to the heavy tenant's pace (which would
-        # cap aggregate rate at n_tenants / heaviest-round).
-        tl = a.tenant_load(self.g, cm)
-        vt_weight = {t: max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
-                     for t in tenants}
-
-        def exec_time(nid: int) -> float:
-            node = g.nodes[nid]
-            if node.is_free():
-                return 0.0
-            pu = speed[pu_of[nid]]
-            return cm.time(node, pu.pu_type, pu.speed)
-
-        evq: List[Tuple[float, int, str, tuple]] = []
-        seq = 0
-
-        def push(t: float, kind: str, payload: tuple) -> None:
-            nonlocal seq
-            heapq.heappush(evq, (t, seq, kind, payload))
-            seq += 1
-
-        missing: Dict[Tuple[str, int, int], int] = {}
-        inject_time: Dict[Tuple[str, int], float] = {}
-        complete_time: Dict[Tuple[str, int], float] = {}
-        frame_left: Dict[Tuple[str, int], int] = {}
-        injected = {t: 0 for t in tenants}
-        ready_q: Dict[int, List[Tuple[float, int, float, int, float]]] = {
-            p.pu_id: [] for p in a.pus
-        }
-        pu_free_at: Dict[int, float] = {p.pu_id: 0.0 for p in a.pus}
-        pu_idle: Dict[int, bool] = {p.pu_id: True for p in a.pus}
-        busy_iv: Dict[int, List[Tuple[float, float]]] = {p.pu_id: [] for p in a.pus}
-        tenant_busy: Dict[str, Dict[int, float]] = {
-            t: {p.pu_id: 0.0 for p in a.pus} for t in tenants
-        }
-        completions: Dict[str, List[float]] = {t: [] for t in tenants}
-
-        def inject(tn: str, f: int, t: float) -> None:
-            inject_time[(tn, f)] = t
-            frame_left[(tn, f)] = len(t_sinks[tn])
-            for nid in t_nodes[tn]:
-                missing[(tn, f, nid)] = len(preds[nid])
-            for nid in t_sources[tn]:
-                push(t, "ready", (tn, f, nid))
-            injected[tn] += 1
-
-        def enqueue_ready(tn: str, f: int, nid: int, t: float) -> None:
-            pid = pu_of[nid]
-            # virtual time first (cross-tenant fairness), then per-tenant
-            # frame number and the critical-path tiebreak (as in the
-            # single-tenant executor).
-            heapq.heappush(
-                ready_q[pid], (f * vt_weight[tn], f, -self._blevel[nid], nid, t))
-            if pu_idle[pid]:
-                push(max(t, pu_free_at[pid]), "dispatch", (pid,))
-
-        def finish(tn: str, f: int, nid: int, t: float) -> None:
-            node = g.nodes[nid]
-            if not succs[nid]:
-                frame_left[(tn, f)] -= 1
-                if frame_left[(tn, f)] == 0:
-                    completions[tn].append(t)
-                    complete_time[(tn, f)] = t
-                    push(t, "complete", (tn, f))
-                return
-            for s in succs[nid]:
-                xfer = cm.transfer(node, same_pu=(pu_of[s] == pu_of[nid]))
-                push(t + xfer, "arrive", (tn, f, s))
-
-        # prime / schedule injections
-        if rates is not None:
-            for tn in tenants:
-                r = rates[tn]
-                if r <= 0:
-                    raise ValueError(f"rate for tenant '{tn}' must be > 0")
-                for f in range(frames[tn]):
-                    push(f / r, "inject", (tn, f))
-        else:
-            for tn in tenants:
-                for f in range(min(in_flight, frames[tn])):
-                    inject(tn, f, 0.0)
-
-        makespan = 0.0
-        while evq:
-            t, _, kind, payload = heapq.heappop(evq)
-            makespan = max(makespan, t)
-            if kind == "inject":
-                tn, f = payload
-                inject(tn, f, t)
-            elif kind == "ready":
-                tn, f, nid = payload
-                enqueue_ready(tn, f, nid, t)
-            elif kind == "arrive":
-                tn, f, nid = payload
-                missing[(tn, f, nid)] -= 1
-                if missing[(tn, f, nid)] == 0:
-                    push(t, "ready", (tn, f, nid))
-            elif kind == "dispatch":
-                (pid,) = payload
-                if not pu_idle[pid] or not ready_q[pid]:
-                    continue
-                _vt, f, _negbl, nid, _tr = heapq.heappop(ready_q[pid])
-                tn = tenant_of[nid]
-                dt = exec_time(nid)
-                pu_idle[pid] = False
-                start = max(t, pu_free_at[pid])
-                end = start + dt
-                pu_free_at[pid] = end
-                if dt > 0:
-                    busy_iv[pid].append((start, end))
-                    tenant_busy[tn][pid] += dt
-                push(end, "done", (pid, tn, f, nid))
-            elif kind == "done":
-                pid, tn, f, nid = payload
-                pu_idle[pid] = True
-                finish(tn, f, nid, t)
-                if ready_q[pid]:
-                    push(t, "dispatch", (pid,))
-            elif kind == "complete":
-                tn, f = payload
-                if rates is None and injected[tn] < frames[tn]:
-                    inject(tn, injected[tn], t)
-        sojourns = {
-            tn: [complete_time[(tn, f)] - inject_time[(tn, f)]
-                 for f in range(frames[tn]) if (tn, f) in complete_time]
-            for tn in tenants
-        }
-        return (makespan, {t: sorted(c) for t, c in completions.items()},
-                busy_iv, sojourns, tenant_busy)

@@ -19,9 +19,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,10 +7,8 @@ jnp oracle, so every caller can use one API everywhere.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .conv2d import imc_conv2d

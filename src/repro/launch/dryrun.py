@@ -25,21 +25,22 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod] [--force]
 """
 
-import argparse
-import dataclasses
-import json
-import re
-import time
-import traceback
-from typing import Dict, Optional, Tuple
+# The XLA env flag above must be set before anything imports jax,
+# hence module code precedes the imports.
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro.configs import SHAPES, all_archs, get_config
-from repro.configs.base import LMConfig, Segment, ShapeSpec, shape_supported
-from repro.launch.mesh import make_production_mesh
-from repro.models.lm import model, sharding
-from repro.optim import adamw
+from repro.configs import SHAPES, all_archs, get_config  # noqa: E402
+from repro.configs.base import LMConfig, ShapeSpec, shape_supported  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.lm import model, sharding  # noqa: E402
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "artifacts", "dryrun")

@@ -19,11 +19,10 @@ Usage: PYTHONPATH=src python -m repro.launch.roofline [--markdown]
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import SHAPES, all_archs, get_config
 from repro.models.lm import transformer

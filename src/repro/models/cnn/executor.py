@@ -23,7 +23,6 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.graph import Graph, OpKind

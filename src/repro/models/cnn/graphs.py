@@ -15,12 +15,13 @@ ResNet18-CIFAR (verified in tests/test_cnn_graphs.py).
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
-from repro.core.graph import Graph, Node, OpKind
+from repro.core.graph import Graph, OpKind
 
 from . import layers as L
 from .resnet import RESNET8, RESNET18_CIFAR
+from .yolo import CH, NC, REG_MAX, YOLOV8N
 
 
 def _add_conv(g: Graph, name: str, deps: List[int], h: int, w: int, k: int,
@@ -111,7 +112,6 @@ TABLE1_IMC_NODE_IDS = frozenset(
 # main branches".
 # ===========================================================================
 
-from .yolo import CH, NC, REG_MAX, STRIDES, YOLOV8N
 
 
 class _Emit:

@@ -10,10 +10,13 @@ absorbed into weights/bias).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
+try:
+    import jax
+    import jax.numpy as jnp
+except ModuleNotFoundError:  # cost helpers stay importable without jax
+    jax = jnp = None  # type: ignore[assignment]
 
 
 # ---------------------------------------------------------------------------

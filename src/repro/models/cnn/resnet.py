@@ -14,10 +14,13 @@
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
+try:
+    import jax
+    import jax.numpy as jnp
+except ModuleNotFoundError:  # arch specs stay importable without jax
+    jax = jnp = None  # type: ignore[assignment]
 
 from . import layers as L
 

@@ -15,10 +15,13 @@ two short ones (the 3-conv box/cls head branches).
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
+try:
+    import jax
+    import jax.numpy as jnp
+except ModuleNotFoundError:  # arch specs stay importable without jax
+    jax = jnp = None  # type: ignore[assignment]
 
 from . import layers as L
 

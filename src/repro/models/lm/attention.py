@@ -16,7 +16,7 @@ drop-in for the TPU hot path (kernels are validated in interpret mode).
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

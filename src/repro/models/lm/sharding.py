@@ -23,10 +23,9 @@ their leading layer dim unsharded.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import LMConfig
@@ -244,8 +243,8 @@ def replicated(mesh: Mesh):
 # activation-constraint context (set by launchers; no-op on bare CPU)
 # ---------------------------------------------------------------------------
 
-import contextlib as _contextlib
-import contextvars as _contextvars
+import contextlib as _contextlib  # noqa: E402  (section-local helper deps)
+import contextvars as _contextvars  # noqa: E402
 
 _ACT_MESH: "_contextvars.ContextVar" = _contextvars.ContextVar(
     "repro_activation_mesh", default=None)

@@ -26,7 +26,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import GLOBAL_WINDOW, LMConfig, Segment
+from repro.configs.base import LMConfig, Segment
 
 from . import attention, mlp, moe, rglru, ssm
 from .sharding import constrain_tokens

@@ -18,7 +18,7 @@ and is tested against ``quantized_matmul`` bit-exactly.
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -122,8 +122,6 @@ def quantized_conv2d(x: jnp.ndarray, w: jnp.ndarray,
 def calibrate_resnet(params: Dict, x: jnp.ndarray, cfg: dict) -> Dict[str, float]:
     """Record per-layer input activation scales on a calibration batch by
     replaying the reference forward pass."""
-    from .cnn import resnet  # local import to avoid cycles
-
     scales: Dict[str, float] = {}
 
     # trace manually, mirroring resnet.forward

@@ -9,7 +9,7 @@ FSDP-sharded params get FSDP-sharded optimizer state for free.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, Optional
 
 from repro.configs.base import LMConfig, ShapeSpec
 from repro.data.pipeline import DataConfig, make_batch

@@ -1,0 +1,32 @@
+"""Collection-time dependency gating.
+
+The scheduling core (graph/schedulers/simulator/elastic) is pure stdlib
+and must stay testable with no optional dependencies installed (the CI
+minimal-deps leg).  Modules whose subject *is* an optional dependency
+(jax kernels, LM tier, CNN executors) are skipped wholesale when jax is
+missing; per-test shims (``tests/helpers.py`` for hypothesis,
+``requires_nx`` in test_graph.py for networkx) handle the finer grain.
+"""
+
+import importlib.util
+
+
+def _missing(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is None
+    except ModuleNotFoundError:  # broken/blocked distribution counts as absent
+        return True
+
+
+collect_ignore = []
+
+if _missing("jax"):
+    collect_ignore += [
+        "test_beyond_paper.py",
+        "test_cnn_models.py",
+        "test_dryrun_method.py",
+        "test_kernels.py",
+        "test_lm_archs.py",
+        "test_lm_components.py",
+        "test_runtime.py",
+    ]

@@ -10,7 +10,6 @@ Deterministic tests built on :func:`build_random_graph` run either way.
 from __future__ import annotations
 
 import random
-from typing import List, Tuple
 
 import pytest
 
@@ -57,6 +56,9 @@ except ModuleNotFoundError:  # degrade gracefully: collect, then skip
 
 
 from repro.core.graph import Graph, OpKind
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS",
+           "build_random_graph", "random_graph_st"]
 
 IMC_OPS = [OpKind.CONV, OpKind.MVM]
 DPU_OPS = [OpKind.ADD, OpKind.POOL_MAX, OpKind.POOL_AVG, OpKind.CONCAT,

@@ -11,7 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import SHAPES, all_archs, get_config
 from repro.configs.base import shape_supported

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import SHAPES, all_archs, get_config
+from repro.configs import all_archs, get_config
 from repro.configs.base import ShapeSpec
 from repro.models.lm import model, transformer
 from repro.optim import adamw

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from helpers import given, settings, st
 
-from repro.models.lm import attention, mlp, moe, rglru, ssm
+from repro.models.lm import attention, moe, rglru, ssm
 from repro.optim import adamw
 
 

@@ -8,7 +8,6 @@ measurements are unpublished); every *relative* claim is validated here.
 import pytest
 
 from repro.core import (CostModel, IMCESimulator, get_scheduler, make_pus)
-from repro.core.graph import PUType
 from repro.models.cnn.graphs import (resnet8_graph, resnet18_graph,
                                      yolov8n_graph)
 

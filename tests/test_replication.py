@@ -1,0 +1,353 @@
+"""LRMP-style layer replication: graph transform structure, round-robin
+frame routing in the simulator, amortized cost accounting, the lblp-r
+greedy scheduler, and the elastic replica-absorb fast path.
+
+Deterministic tests run everywhere; hypothesis variants widen the
+"replication never lowers the analytic bound" invariant over random
+graphs when the [test] extra is installed.
+"""
+
+
+import pytest
+
+from repro.core.cost import CostModel, HardwareProfile, make_pus
+from repro.core.elastic import ElasticSession
+from repro.core.graph import Graph, GraphError, MultiTenantGraph, OpKind
+from repro.core.schedulers import get_scheduler, schedule_replicated
+from repro.core.schedulers.lblp_r import LBLPRScheduler
+from repro.core.simulator import IMCESimulator, MultiTenantSimulator
+
+from helpers import build_random_graph, given, settings, st
+
+ROOMY = HardwareProfile(name="roomy", pu_weight_capacity=1e12)
+
+
+def chain(n_vectors_list, name="chain"):
+    g = Graph(name)
+    prev = None
+    for i, nv in enumerate(n_vectors_list):
+        n = g.add(f"c{i}", OpKind.CONV, flops=1e6, weight_bytes=1e3,
+                  out_bytes=2e3, out_elems=2e3,
+                  meta=dict(cin_kk=64, cout=64, n_vectors=nv))
+        if prev is not None:
+            g.add_edge(prev, n.node_id)
+        prev = n.node_id
+    return g
+
+
+class TestReplicateTransform:
+    def test_clones_structure_and_meta(self):
+        g = chain([64, 256, 64])
+        g2 = g.replicate(2, 3)
+        assert len(g) == 3 and len(g2) == 5     # original untouched
+        group = g2.replica_groups()[2]
+        assert len(group) == 3
+        for i, m in enumerate(sorted(group, key=lambda x: g2.nodes[x].meta["replica_index"])):
+            node = g2.nodes[m]
+            assert node.replica_count == 3
+            assert node.replica_index == i
+            assert node.replica_group == 2
+            assert node.flops == g.nodes[2].flops
+            assert g2.predecessors(m) == g.predecessors(2)
+            assert g2.successors(m) == g.successors(2)
+        # unreplicated nodes report count 1
+        assert g2.nodes[1].replica_count == 1
+        assert g2.nodes[1].replica_index is None
+
+    def test_rejects_bad_replication(self):
+        g = chain([64, 64])
+        with pytest.raises(GraphError):
+            g.replicate(1, 0)
+        with pytest.raises(GraphError):
+            g.replicate(1, 2).replicate(1, 2)   # already replicated
+        g.add("out", OpKind.OUTPUT, deps=[2])
+        with pytest.raises(GraphError):
+            g.replicate(3, 2)                   # structural node
+        with pytest.raises(KeyError):
+            g.replicate(99, 2)
+
+    def test_with_replicas_and_copy_semantics(self):
+        g = chain([64, 256, 512])
+        g2 = g.with_replicas({2: 2, 3: 3})
+        assert g2 is not g and len(g) == 3
+        assert {b: len(m) for b, m in g2.replica_groups().items()} == {2: 2, 3: 3}
+        # empty counts still copies
+        g3 = g.with_replicas({})
+        assert g3 is not g and len(g3) == len(g)
+
+    def test_drop_replica_reindexes_and_unreplicates(self):
+        g = chain([64, 256, 64]).replicate(2, 3)
+        members = g.replica_groups()[2]
+        g2 = g.drop_replica(members[1])
+        left = g2.replica_groups()[2]
+        assert len(left) == 2
+        assert sorted(g2.nodes[m].meta["replica_index"] for m in left) == [0, 1]
+        assert all(g2.nodes[m].replica_count == 2 for m in left)
+        g3 = g2.drop_replica(left[0])
+        assert not g3.replica_groups()
+        survivor = [n for n in g3.nodes
+                    if g3.nodes[n].name.startswith("c1")][0]
+        assert g3.nodes[survivor].replica_count == 1
+        with pytest.raises(GraphError):
+            g3.drop_replica(1)                  # not a replica
+
+    def test_json_round_trip_keeps_replica_tags(self):
+        g = chain([64, 256, 64]).replicate(2, 2)
+        rt = Graph.from_json(g.to_json())
+        assert rt.replica_groups() == g.replica_groups()
+
+    def test_multi_tenant_replication_keeps_tenant_registry(self):
+        mt = MultiTenantGraph.union(
+            [chain([64, 256], "a"), chain([64, 512], "b")])
+        base = mt.tenant_nodes("b")[1]          # b's heavy conv
+        mt2 = mt.replicate(base, 2)
+        assert isinstance(mt2, MultiTenantGraph)
+        assert mt2.tenants == ["a", "b"]
+        new = set(mt2.tenant_nodes("b")) - set(mt.tenant_nodes("b"))
+        assert len(new) == 1
+        (rid,) = new
+        assert mt2.tenant_of(rid) == "b"
+        assert rid in mt2.tenant_sinks("b") or rid in mt2.tenant_nodes("b")
+        # round trip keeps the replica inside the tenant
+        rt = MultiTenantGraph.from_json(mt2.to_json())
+        assert set(rt.tenant_nodes("b")) == set(mt2.tenant_nodes("b"))
+        # dropping it restores the original node set
+        mt3 = mt2.drop_replica(rid)
+        assert set(mt3.tenant_nodes("b")) == set(mt.tenant_nodes("b"))
+
+
+class TestAmortizedAccounting:
+    def test_frame_time_divides_by_replica_count(self):
+        g = chain([64, 256, 64])
+        cm = CostModel(ROOMY)
+        t = cm.time(g.nodes[2])
+        g2 = g.replicate(2, 4)
+        for m in g2.replica_groups()[2]:
+            assert cm.frame_time(g2.nodes[m]) == pytest.approx(t / 4)
+            assert cm.time(g2.nodes[m]) == pytest.approx(t)  # full per frame
+
+    def test_assignment_load_amortizes_replicas(self):
+        g = chain([64, 256, 64])
+        cm = CostModel(ROOMY)
+        g2 = g.replicate(2, 2)
+        a = get_scheduler("lblp", cm).schedule(g2, make_pus(4, 0))
+        load = a.load(g2, cm)
+        # total amortized load == total unreplicated work per frame
+        base_total = sum(cm.time(n) for n in g.nodes.values())
+        assert sum(load.values()) == pytest.approx(base_total)
+
+    def test_resolve_graph_on_base_graph_callers(self):
+        """Assignment helpers accept the base graph and transparently use
+        meta['replicated_graph'] (lblp-r returns mappings over it)."""
+        g = chain([64, 1024, 64, 64])
+        cm = CostModel(ROOMY)
+        a = get_scheduler("lblp-r", cm).schedule(g, make_pus(4, 0))
+        assert a.meta["replicas"]               # something replicated
+        a.validate(g, cm, check_capacity=False)
+        assert sum(a.load(g, cm).values()) > 0
+        assert a.resolve_graph(g) is a.meta["replicated_graph"]
+
+
+class TestReplicatedSimulation:
+    def test_replicated_chain_rate_scales(self):
+        """One dominant node on k PUs: round-robin replication multiplies
+        the saturated processing rate ~k-fold."""
+        cm = CostModel(ROOMY)
+        g = chain([1024, 64, 64])
+        a0 = get_scheduler("lblp", cm).schedule(g, make_pus(3, 0))
+        r0 = IMCESimulator(g, cm).run(a0, frames=128)
+        g2 = g.replicate(1, 2)
+        a2 = get_scheduler("lblp", cm).schedule(g2, make_pus(3, 0))
+        r2 = IMCESimulator(g2, cm).run(a2, frames=128)
+        # not exactly /2: LBLP's LP-first pass may co-locate a light chain
+        # node with one replica (129+18 us here), still a ~1.75x bound cut
+        assert r2.bound_interval < r0.bound_interval * 0.65
+        assert r2.rate > r0.rate * 1.5
+
+    def test_every_frame_completes_once(self):
+        cm = CostModel(ROOMY)
+        g = chain([256, 256, 64]).replicate(2, 3)
+        a = get_scheduler("lblp", cm).schedule(g, make_pus(4, 0))
+        makespan, completions, _, sojourns = IMCESimulator(
+            g, cm)._simulate(a, frames=30, in_flight=4)
+        assert len(completions) == 30
+        assert len(sojourns) == 30
+        assert all(s > 0 for s in sojourns)
+
+    def test_replica_work_splits_round_robin(self):
+        """Each replica of a 2-group on its own PU gets ~half the frames'
+        busy seconds."""
+        cm = CostModel(ROOMY)
+        g = chain([1024]).replicate(1, 2)
+        members = g.replica_groups()[1]
+        a = get_scheduler("lblp", cm).schedule(g, make_pus(2, 0))
+        assert a.mapping[members[0]] != a.mapping[members[1]]
+        r = IMCESimulator(g, cm).run(a, frames=64)
+        busys = sorted(r.busy.values())
+        assert busys[0] == pytest.approx(busys[1], rel=0.1)
+
+    def test_multi_tenant_replicated_union_runs(self):
+        cm = CostModel(ROOMY)
+        mt = MultiTenantGraph.union(
+            [chain([64, 512], "a"), chain([64, 128], "b")])
+        mt_r, a = schedule_replicated(mt, make_pus(4, 0), cm)
+        r = MultiTenantSimulator(mt_r, cm).run(a, frames=32)
+        assert set(r.tenants) == {"a", "b"}
+        for m in r.tenants.values():
+            assert m.frames == 32
+            assert m.rate > 0
+
+
+class TestLBLPRScheduler:
+    def test_never_worse_bound_than_lblp(self):
+        cm = CostModel(ROOMY)
+        for seed in (3, 17, 42):
+            g = build_random_graph(14, 0.3, seed)
+            fleet = make_pus(4, 2)
+            b_lblp = max(get_scheduler("lblp", cm)
+                         .schedule(g, fleet).load(g, cm).values())
+            a = get_scheduler("lblp-r", cm).schedule(g, fleet)
+            assert a.meta["bound_interval"] <= b_lblp * (1 + 1e-9), seed
+
+    def test_replicates_dominant_node(self):
+        cm = CostModel(ROOMY)
+        g = chain([2048, 64, 64, 64])
+        a = get_scheduler("lblp-r", cm).schedule(g, make_pus(4, 0))
+        assert a.meta["replicas"].get(1, 1) >= 2
+        assert a.meta["base_algorithm"] == "lblp"
+
+    def test_budget_zero_is_plain_lblp(self):
+        cm = CostModel(ROOMY)
+        g = chain([2048, 64, 64])
+        fleet = make_pus(4, 0)
+        a = LBLPRScheduler(cm, replica_budget=0).schedule(g, fleet)
+        assert a.meta["replicas"] == {}
+        assert a.mapping == get_scheduler("lblp", cm).schedule(g, fleet).mapping
+
+    def test_rejects_prereplicated_graph(self):
+        from repro.core.schedulers import ScheduleError
+        cm = CostModel(ROOMY)
+        g = chain([256, 64]).replicate(1, 2)
+        with pytest.raises(ScheduleError):
+            get_scheduler("lblp-r", cm).schedule(g, make_pus(2, 0))
+
+    def test_deterministic(self):
+        cm = CostModel(ROOMY)
+        g = build_random_graph(16, 0.3, seed=7)
+        fleet = make_pus(5, 2)
+        a1 = get_scheduler("lblp-r", cm).schedule(g, fleet)
+        a2 = get_scheduler("lblp-r", cm).schedule(g, fleet)
+        assert a1.mapping == a2.mapping
+        assert a1.meta["replicas"] == a2.meta["replicas"]
+
+    def test_validated_rate_never_lower_than_lblp(self):
+        """The benchmark acceptance contract, in miniature: with
+        measured-rate validation the replicated deployment's processing
+        rate is >= plain LBLP's on the same fleet."""
+        cm = CostModel()
+        from repro.models.cnn.graphs import resnet8_graph
+        g = resnet8_graph()
+        fleet = make_pus(12, 6)
+        base = get_scheduler("lblp", cm).schedule(g, fleet)
+        rate0 = IMCESimulator(g, cm).run(base, frames=64).rate
+        sched = LBLPRScheduler(cm, validate_rate=64)
+        a = sched.schedule(g, fleet)
+        g_r = a.meta["replicated_graph"]
+        rate_r = IMCESimulator(g_r, cm).run(a, frames=64).rate
+        assert rate_r >= rate0 * (1 - 1e-9)
+        assert rate_r > rate0 * 1.5             # and the gain is real here
+
+
+class TestElasticAbsorb:
+    def _session_with_replicas(self):
+        cm = CostModel(ROOMY)
+        g = chain([2048, 64, 64, 64])
+        return ElasticSession(g, make_pus(5, 0), algorithm="lblp-r",
+                              cost_model=cm)
+
+    def test_replica_pu_failure_absorbed_without_reschedule(self):
+        sess = self._session_with_replicas()
+        mapping0 = dict(sess.assignment.mapping)
+        groups = sess.serving_graph.replica_groups()
+        rep_nodes = {m for ms in groups.values() for m in ms}
+        victim_pu = next(
+            pid for pid in sorted(set(mapping0.values()))
+            if all(n in rep_nodes
+                   for n, p in mapping0.items() if p == pid))
+        ev = sess.fail(victim_pu)
+        assert ev.recovery == "replica-absorb"
+        dropped = set(mapping0) - set(ev.mapping)
+        assert dropped                          # victims removed ...
+        assert all(mapping0[n] == victim_pu for n in dropped)
+        # ... and every surviving node kept its PU (no re-placement)
+        assert all(ev.mapping[n] == mapping0[n] for n in ev.mapping)
+        assert ev.rate > 0
+
+    def test_sole_copy_failure_falls_back_to_reschedule(self):
+        sess = self._session_with_replicas()
+        g = sess.serving_graph
+        solo_pu = next(p for n, p in sess.assignment.mapping.items()
+                       if g.nodes[n].replica_group is None)
+        ev = sess.fail(solo_pu)
+        assert ev.recovery == "schedule"
+        assert solo_pu not in set(ev.mapping.values())
+
+    def test_unreplicated_session_always_reschedules(self):
+        cm = CostModel(ROOMY)
+        g = build_random_graph(10, 0.3, seed=5)
+        sess = ElasticSession(g, make_pus(3, 2), cost_model=cm)
+        ev = sess.fail(2)
+        assert ev.recovery == "schedule"
+
+
+class TestReplicationBenchmark:
+    def test_sweep_meets_acceptance_criteria(self):
+        """The benchmark contract: lblp-r >= lblp processing rate on every
+        sweep cell, with at least one cell genuinely improved."""
+        import io
+        from contextlib import redirect_stdout
+
+        from benchmarks import replication
+
+        with redirect_stdout(io.StringIO()):
+            out = replication.main(frames=16)
+        assert out["cells"]
+        assert out["cells_geq_base"] == len(out["cells"])
+        assert out["cells_improved"] >= 1
+
+
+# -- property-based widening (skipped cleanly without hypothesis) -----------
+
+class TestProperties:
+    @given(seed=st.integers(0, 5000), n_imc=st.integers(2, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_lblp_r_bound_never_above_lblp(self, seed, n_imc):
+        cm = CostModel(ROOMY)
+        g = build_random_graph(12, 0.3, seed)
+        fleet = make_pus(n_imc, 2)
+        b_lblp = max(get_scheduler("lblp", cm)
+                     .schedule(g, fleet).load(g, cm).values())
+        a = get_scheduler("lblp-r", cm).schedule(g, fleet)
+        assert a.meta["bound_interval"] <= b_lblp * (1 + 1e-9)
+
+    @given(seed=st.integers(0, 5000), n_imc=st.integers(3, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_replication_never_lowers_validated_rate(self, seed, n_imc):
+        """lblp-r with measured-rate validation never returns a schedule
+        whose processing rate is below plain LBLP's.
+
+        (The *unguarded* form — "blindly k-replicating the heaviest node
+        never hurts" — is false: extra replicas can perturb greedy LBLP's
+        placement order enough to worsen the bound on adversarial random
+        DAGs, which is exactly why lblp-r accepts only improving steps and
+        reverts when the gain fails to materialize.)"""
+        cm = CostModel(ROOMY)
+        g = build_random_graph(10, 0.35, seed, imc_fraction=1.0)
+        fleet = make_pus(n_imc, 2)
+        frames = 48
+        a0 = get_scheduler("lblp", cm).schedule(g, fleet)
+        r0 = IMCESimulator(g, cm).run(a0, frames=frames)
+        a = LBLPRScheduler(cm, validate_rate=frames).schedule(g, fleet)
+        g_r = a.meta["replicated_graph"]
+        r = IMCESimulator(g_r, cm).run(a, frames=frames)
+        assert r.rate >= r0.rate * (1 - 1e-9)

@@ -12,12 +12,12 @@ import pytest
 from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
-from repro.core import CostModel, make_pus
+from repro.core import make_pus
 from repro.core.elastic import ElasticSession
 from repro.core.pipeline_partition import partition, transformer_block_graph
 from repro.data.pipeline import DataConfig, DataIterator, make_batch
 from repro.models.cnn.graphs import resnet18_graph
-from repro.models.lm import model, transformer
+from repro.models.lm import transformer
 from repro.optim import adamw, compression
 from repro.runtime.serve_loop import Request, Server
 from repro.runtime.straggler import DeadlineDataIterator, StragglerPolicy

@@ -6,7 +6,7 @@ import math
 import pytest
 from helpers import given, settings, st
 
-from repro.core.cost import CostModel, HardwareProfile, PUSpec, make_pus
+from repro.core.cost import CostModel, HardwareProfile, make_pus
 from repro.core.graph import Graph, OpKind, PUType
 from repro.core.schedulers import available, get_scheduler
 from repro.core.schedulers.base import ScheduleError

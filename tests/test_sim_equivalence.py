@@ -1,0 +1,108 @@
+"""Simulator-unification equivalence pins.
+
+The tenant-keyed event loop (``IMCESimulator._run_streams``) replaced two
+near-duplicate loops (the historical single-tenant ``_simulate`` and
+``MultiTenantSimulator._simulate_mt``).  These tests pin the unified
+loop's output against golden values captured from the pre-unification
+simulator on the paper-validation graphs: every ``SimResult`` field
+(rate, latency, utilization, makespan) and the raw event-loop outputs
+(per-frame completion times, sojourns, busy intervals) must be
+*bit-identical* — the single-tenant run is the 1-stream special case and
+its ready-queue order is provably unchanged.
+
+Regenerating the goldens is only legitimate after an intentional
+semantic change to the execution model; see tests/data/.
+"""
+
+import json
+import pathlib
+
+from repro.core import (CostModel, IMCESimulator, MultiTenantSimulator,
+                        get_scheduler, make_pus)
+from repro.core.graph import MultiTenantGraph
+from repro.models.cnn.graphs import resnet8_graph, resnet18_graph
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "data" / "golden_simulator.json")
+    .read_text())
+
+GRAPHS = {"resnet8": resnet8_graph, "resnet18": resnet18_graph}
+FLEETS = [(2, 1), (4, 2), (8, 4)]
+ALGS = ("lblp", "rr", "wb")
+
+
+def result_fields(r):
+    return dict(
+        latency=r.latency, latency_isolated=r.latency_isolated,
+        interval=r.interval, rate=r.rate, makespan=r.makespan,
+        frames=r.frames, mean_utilization=r.mean_utilization,
+        bound_interval=r.bound_interval,
+        busy={str(k): v for k, v in sorted(r.busy.items())},
+        utilization={str(k): v for k, v in sorted(r.utilization.items())},
+    )
+
+
+class TestSingleTenantEquivalence:
+    def test_simresults_bit_identical(self):
+        cm = CostModel()
+        checked = 0
+        for gname, gfn in GRAPHS.items():
+            for n_imc, n_dpu in FLEETS:
+                for alg in ALGS:
+                    g = gfn()
+                    a = get_scheduler(alg, cm).schedule(
+                        g, make_pus(n_imc, n_dpu))
+                    r = IMCESimulator(g, cm).run(a, frames=64)
+                    got = result_fields(r)
+                    exp = GOLDEN[f"{gname}/{alg}/{n_imc}+{n_dpu}"]
+                    for fld, v in exp.items():
+                        assert got[fld] == v, (gname, alg, n_imc, n_dpu, fld)
+                    checked += 1
+        assert checked == len(GRAPHS) * len(FLEETS) * len(ALGS)
+
+    def test_raw_event_loop_outputs_bit_identical(self):
+        """Completion times, sojourns and busy intervals of the raw loop —
+        the strongest form of 'the ready-queue order did not change'."""
+        cm = CostModel()
+        for gname, gfn in GRAPHS.items():
+            g = gfn()
+            a = get_scheduler("lblp", cm).schedule(g, make_pus(4, 2))
+            makespan, completions, busy, sojourns = IMCESimulator(
+                g, cm)._simulate(a, frames=24, in_flight=6)
+            exp = GOLDEN[f"{gname}/lblp/4+2/raw"]
+            assert makespan == exp["makespan"], gname
+            assert completions == exp["completions"], gname
+            assert sojourns == exp["sojourns"], gname
+            got_busy = {str(k): [list(iv) for iv in v]
+                        for k, v in sorted(busy.items())}
+            assert got_busy == exp["busy_iv"], gname
+
+
+class TestMultiTenantEquivalence:
+    def test_mt_simresult_bit_identical(self):
+        cm = CostModel()
+        mt = MultiTenantGraph.union([resnet8_graph(), resnet18_graph()])
+        a = get_scheduler("lblp-mt", cm).schedule(mt, make_pus(8, 4))
+        r = MultiTenantSimulator(mt, cm).run(a, frames=32)
+        exp = GOLDEN["mt/lblp-mt/8+4"]
+        got = result_fields(r)
+        for fld, v in exp.items():
+            if fld == "tenants":
+                continue
+            assert got[fld] == v, fld
+        for t, tm in exp["tenants"].items():
+            m = r.tenants[t]
+            got_t = dict(rate=m.rate, interval=m.interval, latency=m.latency,
+                         frames=m.frames,
+                         utilization_share=m.utilization_share)
+            assert got_t == tm, t
+
+
+class TestOneEventLoop:
+    def test_no_duplicate_loop_remains(self):
+        """The tech-debt contract: MultiTenantSimulator must not carry its
+        own event loop — one shared implementation only."""
+        assert not hasattr(MultiTenantSimulator, "_simulate_mt")
+        assert (MultiTenantSimulator._run_streams
+                is IMCESimulator._run_streams)
+        assert MultiTenantSimulator._simulate is IMCESimulator._simulate

@@ -1,7 +1,6 @@
 """DES simulator invariants: latency bounds, steady-state rate vs the
 analytic pipeline bound, utilization sanity, determinism."""
 
-import math
 
 import pytest
 from helpers import given, settings, st
