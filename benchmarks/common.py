@@ -1,4 +1,12 @@
-"""Shared benchmark utilities: experiment runners + artifact dumping."""
+"""Shared benchmark utilities: experiment runners + artifact dumping.
+
+All suites take their simulator from :func:`make_sim`, which honors the
+module-level ``SIM_MODE``: ``"periodic"`` by default (the compiled
+quantized loop with steady-state early exit — see
+``repro.core.simulator``), overridable to ``"exact"`` or ``"reference"``
+via the ``REPRO_SIM_MODE`` environment variable or by assignment (the
+``sim_speed`` suite toggles it to measure honest before/after).
+"""
 
 from __future__ import annotations
 
@@ -7,7 +15,7 @@ import os
 import time
 from typing import Dict, Iterable, Tuple
 
-from repro.core import (CostModel, IMCESimulator, get_scheduler, make_pus,
+from repro.core import (CostModel, get_scheduler, make_pus, make_simulator,
                         normalize)
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
@@ -15,12 +23,20 @@ ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench
 PAPER_ALGS = ("lblp", "wb", "rr", "rd")
 EXTRA_ALGS = ("lblp-x", "heft", "cpop")
 
+#: simulation engine used by every suite ("periodic" | "exact" | "reference")
+SIM_MODE = os.environ.get("REPRO_SIM_MODE", "periodic")
+
+
+def make_sim(graph, cm: CostModel | None = None):
+    """Simulator over ``graph`` on the suite-wide ``SIM_MODE`` engine."""
+    return make_simulator(graph, cm, engine=SIM_MODE)
+
 
 def sweep(graph, fleets: Iterable[Tuple[int, int]], algs=PAPER_ALGS,
           frames: int = 96) -> Dict:
     """Run ``algs`` over PU fleets; returns nested result dict."""
     cm = CostModel()
-    sim = IMCESimulator(graph, cm)
+    sim = make_sim(graph, cm)
     out: Dict = {"graph": graph.name, "fleets": []}
     for n_imc, n_dpu in fleets:
         fleet = make_pus(n_imc, n_dpu)

@@ -1,17 +1,17 @@
 """Beyond-paper: elastic rescheduling degradation curve — rate/latency
 after successive PU failures, LBLP vs static (no-reschedule) baseline."""
 
-from repro.core import CostModel, make_pus
+from repro.core import make_pus
 from repro.core.elastic import ElasticSession
 from repro.models.cnn.graphs import resnet18_graph
 
+from . import common
 from .common import csv_line, dump
 
 
 def main() -> dict:
     g = resnet18_graph()
-    cm = CostModel()
-    sess = ElasticSession(g, make_pus(8, 4))
+    sess = ElasticSession(g, make_pus(8, 4), engine=common.SIM_MODE)
     out = {"events": []}
     print("event          n_pus  rate_fps  latency_ms")
     e0 = sess.history[0]

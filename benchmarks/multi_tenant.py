@@ -19,11 +19,10 @@ simulator's ``SimResult.tenants``.
 
 from __future__ import annotations
 
-from repro.core import (CostModel, IMCESimulator, MultiTenantGraph,
-                        MultiTenantSimulator, get_scheduler, make_pus)
+from repro.core import CostModel, MultiTenantGraph, get_scheduler, make_pus
 from repro.models.cnn.graphs import resnet8_graph, resnet18_graph
 
-from .common import csv_line, dump
+from .common import csv_line, dump, make_sim
 
 CO_ALGS = ("lblp-mt", "rr", "wb")
 
@@ -50,7 +49,7 @@ def static_partition(graphs, tenants, n_imc: int, n_dpu: int, cm: CostModel,
         if not sl:
             raise ValueError("fleet too small to give every tenant a slice")
         a = get_scheduler("lblp", cm).schedule(g, sl)
-        r = IMCESimulator(g, cm).run(a, frames=frames)
+        r = make_sim(g, cm).run(a, frames=frames)
         per_tenant[tenant] = {"rate": r.rate, "latency": r.latency,
                               "n_pus": len(sl)}
     return {
@@ -63,7 +62,7 @@ def co_scheduled(mt: MultiTenantGraph, n_imc: int, n_dpu: int, alg: str,
                  cm: CostModel, frames: int) -> dict:
     fleet = make_pus(n_imc, n_dpu)
     a = get_scheduler(alg, cm).schedule(mt, fleet)
-    r = MultiTenantSimulator(mt, cm).run(a, frames=frames)
+    r = make_sim(mt, cm).run(a, frames=frames)
     return {
         "aggregate_rate": sum(m.rate for m in r.tenants.values()),
         "mean_utilization": r.mean_utilization,

@@ -23,6 +23,7 @@ from repro.core import CostModel, MultiTenantGraph, get_scheduler, make_pus
 from repro.core.schedulers.lblp_r import LBLPRScheduler, measured_rate
 from repro.models.cnn.graphs import resnet8_graph, resnet18_graph
 
+from . import common
 from .common import csv_line, dump
 
 BUDGETS = (1, 2, 4, 8)
@@ -32,14 +33,15 @@ def sweep_cell(g, fleet_shape, cm, frames, base_alg):
     n_imc, n_dpu = fleet_shape
     fleet = make_pus(n_imc, n_dpu)
     base_a = get_scheduler(base_alg, cm).schedule(g, fleet)
-    base_rate = measured_rate(g, base_a, cm, frames)
+    base_rate = measured_rate(g, base_a, cm, frames, engine=common.SIM_MODE)
     rows = []
     for budget in BUDGETS:
         sched = LBLPRScheduler(cm, replica_budget=budget,
-                               validate_rate=frames)
+                               validate_rate=frames,
+                               sim_engine=common.SIM_MODE)
         a = sched.schedule(g, fleet)
         g_r = a.meta["replicated_graph"]
-        rate = measured_rate(g_r, a, cm, frames)
+        rate = measured_rate(g_r, a, cm, frames, engine=common.SIM_MODE)
         rows.append({
             "budget": budget,
             "rate_base": base_rate,

@@ -31,6 +31,7 @@ SUITES = {
     "replication": "replication",
     "sensitivity": "sensitivity",
     "partition": "lm_partition",
+    "sim_speed": "sim_speed",
 }
 
 

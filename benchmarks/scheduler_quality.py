@@ -7,10 +7,10 @@ optimality gap of each heuristic."""
 
 import time
 
-from repro.core import CostModel, IMCESimulator, get_scheduler, make_pus
+from repro.core import CostModel, get_scheduler, make_pus
 from repro.models.cnn.graphs import resnet8_graph, resnet18_graph
 
-from .common import csv_line, dump
+from .common import csv_line, dump, make_sim
 
 ALGS = ("lblp", "wb", "rr", "rd", "heft", "cpop", "lblp-x")
 
@@ -20,7 +20,7 @@ def main() -> dict:
     out = {}
     for g, fleets in ((resnet8_graph(), [(4, 2), (7, 3)]),
                       (resnet18_graph(), [(8, 4)])):
-        sim = IMCESimulator(g, cm)
+        sim = make_sim(g, cm)
         for n_imc, n_dpu in fleets:
             fleet = make_pus(n_imc, n_dpu)
             key = f"{g.name}@{n_imc}+{n_dpu}"

@@ -15,11 +15,11 @@ the *algorithm*, not the calibration point."""
 
 from dataclasses import replace
 
-from repro.core import CostModel, IMCESimulator, get_scheduler, make_pus
+from repro.core import CostModel, get_scheduler, make_pus
 from repro.core.cost import IMCE_DEFAULT
 from repro.models.cnn.graphs import resnet18_graph
 
-from .common import csv_line, dump
+from .common import csv_line, dump, make_sim
 
 SWEEPS = {
     "t_mvm": [50e-9, 250e-9, 1000e-9],
@@ -39,7 +39,7 @@ def main() -> dict:
             prof = replace(IMCE_DEFAULT, name=f"{param}={v}", **{param: v})
             cm = CostModel(prof)
             fleet = make_pus(8, 4, prof)
-            sim = IMCESimulator(g, cm)
+            sim = make_sim(g, cm)
             res = {}
             for alg in ("lblp", "wb", "rr", "rd"):
                 a = get_scheduler(alg, cm).schedule(g, fleet)

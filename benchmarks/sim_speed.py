@@ -1,0 +1,183 @@
+"""Simulator throughput benchmark: the perf trajectory's first point.
+
+Measures the compiled event loop (``repro.core.simulator``) against the
+frozen pre-compilation reference loop (``repro.core._sim_reference``) on
+the workloads the acceptance criteria name:
+
+* the **YOLOv8n 256-frame cell** (233 nodes, lblp on an 8+4 fleet,
+  full ``run()``) — reference vs compiled-exact vs periodic early-exit,
+  plus raw event-loop events/sec;
+* the **simulator-driven suites of ``benchmarks.run`` at ``--frames
+  64``** — every suite whose wall-clock the event loop determines, run
+  twice with the suite-wide engine toggled (``common.SIM_MODE``)
+  between ``"reference"`` and the current default.  The ``kernels``
+  (jax hardware) and ``partition`` (no simulator) suites are excluded:
+  their wall-clock is independent of the loop.
+
+Writes ``BENCH_sim.json`` at the repo root (the perf-trajectory record)
+and the usual artifact under ``artifacts/bench/``.
+"""
+
+from __future__ import annotations
+
+import importlib
+import inspect
+import io
+import json
+import os
+import platform
+import time
+from contextlib import redirect_stdout
+
+from repro.core import CostModel, get_scheduler, make_pus, make_simulator
+from repro.models.cnn.graphs import yolov8n_graph
+
+from . import common
+from .common import csv_line, dump
+
+#: benchmarks.run suites whose wall-clock the simulator determines
+SIM_SUITES = (
+    "fig2",
+    "fig3",
+    "table1",
+    "fig4",
+    "yolo",
+    "quality",
+    "elastic",
+    "multi_tenant",
+    "replication",
+    "sensitivity",
+)
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+
+
+def _best(fn, repeats: int = 2) -> float:
+    out = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        out = min(out, time.perf_counter() - t0)
+    return out
+
+
+def yolo_cell(frames: int) -> dict:
+    g = yolov8n_graph()
+    cm = CostModel()
+    a = get_scheduler("lblp", cm).schedule(g, make_pus(8, 4))
+    sims = {
+        "reference": make_simulator(g, cm, engine="reference"),
+        "exact": make_simulator(g, cm, engine="exact"),
+        "periodic": make_simulator(g, cm, engine="periodic"),
+    }
+    cell: dict = {"graph": g.name, "nodes": len(g), "fleet": "8+4", "frames": frames}
+    for name, sim in sims.items():
+        cell[f"{name}_s"] = _best(lambda s=sim: s.run(a, frames=frames))
+    cell["speedup_exact"] = cell["reference_s"] / cell["exact_s"]
+    cell["speedup_periodic"] = cell["reference_s"] / cell["periodic_s"]
+    cell["early_exit"] = sims["periodic"].last_early_exit
+
+    # raw event-loop throughput (saturated pass only, no run() overhead)
+    in_flight = 14
+    ev = {}
+    for name in ("reference", "exact"):
+        sim = sims[name]
+        dt = _best(lambda s=sim: s._simulate(a, frames=frames, in_flight=in_flight))
+        ev[name] = sim.last_events / dt
+    cell["events_per_sec"] = ev
+    return cell
+
+
+def run_suites(frames: int) -> dict:
+    """Time the simulator-driven ``benchmarks.run`` suites under the
+    reference engine and the current default, mimicking ``run.py``'s
+    frame forwarding."""
+    res: dict = {
+        "frames": frames,
+        "suites": {},
+        "note": (
+            "simulator-driven suites of benchmarks.run; kernels (jax) and "
+            "partition (no simulator) excluded — their wall-clock is "
+            "independent of the event loop"
+        ),
+    }
+    from .run import SUITES
+
+    default_mode = common.SIM_MODE
+    try:
+        for engine, key in (("reference", "ref_s"), (default_mode, "new_s")):
+            common.SIM_MODE = engine
+            for name in SIM_SUITES:
+                module = importlib.import_module(f".{SUITES[name]}", package=__package__)
+                fn = module.main
+                kw = {}
+                if "frames" in inspect.signature(fn).parameters:
+                    kw["frames"] = frames
+
+                def run_once(fn=fn, kw=kw):
+                    with redirect_stdout(io.StringIO()):
+                        fn(**kw)
+
+                res["suites"].setdefault(name, {})[key] = _best(run_once)
+    finally:
+        common.SIM_MODE = default_mode
+    for cell in res["suites"].values():
+        cell["speedup"] = cell["ref_s"] / cell["new_s"]
+    res["total_ref_s"] = sum(c["ref_s"] for c in res["suites"].values())
+    res["total_new_s"] = sum(c["new_s"] for c in res["suites"].values())
+    res["speedup"] = res["total_ref_s"] / res["total_new_s"]
+    # the paper-figure sweeps are the deep-streaming workloads the early
+    # exit targets; the full mix also carries multi-tenant runs (no
+    # multi-stream exit yet) and scheduler-heavy suites, diluting it
+    paper = ("fig2", "fig3", "fig4", "table1")
+    res["paper_sweeps_ref_s"] = sum(res["suites"][n]["ref_s"] for n in paper)
+    res["paper_sweeps_new_s"] = sum(res["suites"][n]["new_s"] for n in paper)
+    res["paper_sweeps_speedup"] = res["paper_sweeps_ref_s"] / res["paper_sweeps_new_s"]
+    res["engine"] = default_mode
+    return res
+
+
+def main(frames: int = 256) -> dict:
+    out = {
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "yolo_cell": yolo_cell(frames),
+        "run_frames64": run_suites(min(frames, 64)),
+    }
+    yc = out["yolo_cell"]
+    rf = out["run_frames64"]
+    print(f"== sim_speed (engine: {common.SIM_MODE}) ==")
+    print(
+        f"yolo {yc['frames']}f cell: reference {yc['reference_s']:.3f}s | "
+        f"exact {yc['exact_s']:.3f}s ({yc['speedup_exact']:.2f}x) | "
+        f"periodic {yc['periodic_s']:.3f}s ({yc['speedup_periodic']:.2f}x, "
+        f"early exit {yc['early_exit']})"
+    )
+    eps = yc["events_per_sec"]
+    print(
+        f"event loop: {eps['reference'] / 1e3:.0f}k ev/s reference -> "
+        f"{eps['exact'] / 1e3:.0f}k ev/s compiled"
+    )
+    print(
+        f"benchmarks.run --frames {rf['frames']} (sim suites): "
+        f"{rf['total_ref_s']:.1f}s reference -> {rf['total_new_s']:.1f}s "
+        f"({rf['speedup']:.2f}x; paper-figure sweeps "
+        f"{rf['paper_sweeps_speedup']:.2f}x)"
+    )
+    for name, cell in sorted(rf["suites"].items()):
+        print(
+            f"  {name:<14s} {cell['ref_s']:7.2f}s -> {cell['new_s']:6.2f}s "
+            f"({cell['speedup']:5.2f}x)"
+        )
+    csv_line("sim_speed.yolo.speedup_periodic", 0.0, f"{yc['speedup_periodic']:.2f}x")
+    csv_line("sim_speed.run_frames64.speedup", 0.0, f"{rf['speedup']:.2f}x")
+    with open(ROOT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    path = dump("sim_speed", out)
+    print(f"artifacts: {os.path.abspath(ROOT_JSON)}, {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,17 @@
 """Paper Table I — ResNet18 on 12 PUs (8 IMC + 4 DPU): per-PU node
 placement, normalized weights area, and utilization for LBLP vs WB."""
 
-from repro.core import CostModel, IMCESimulator, get_scheduler, make_pus
+from repro.core import CostModel, get_scheduler, make_pus
 from repro.core.graph import PUType
 from repro.models.cnn.graphs import resnet18_graph
 
-from .common import csv_line, dump
+from .common import csv_line, dump, make_sim
 
 
 def main() -> dict:
     g = resnet18_graph()
     cm = CostModel()
-    sim = IMCESimulator(g, cm)
+    sim = make_sim(g, cm)
     fleet = make_pus(8, 4)
     out = {}
     for alg in ("lblp", "wb"):

@@ -6,10 +6,10 @@ schedulable-parallelism effect to ~10% of latency; they measured up to a
 branch-parallelism effect, <=10% bound) and the streaming sojourn gap
 (queueing included), which bracket the paper's protocol."""
 
-from repro.core import CostModel, IMCESimulator, get_scheduler, make_pus
+from repro.core import CostModel, get_scheduler, make_pus
 from repro.models.cnn.graphs import yolov8n_graph
 
-from .common import csv_line, dump
+from .common import csv_line, dump, make_sim
 
 FLEETS = [(8, 4), (12, 6), (16, 8), (24, 12)]
 
@@ -17,7 +17,7 @@ FLEETS = [(8, 4), (12, 6), (16, 8), (24, 12)]
 def main() -> dict:
     g = yolov8n_graph()
     cm = CostModel()
-    sim = IMCESimulator(g, cm)
+    sim = make_sim(g, cm)
     crit = g.critical_time(lambda n: cm.time(n))
     total = sum(cm.time(n) for n in g.nodes.values() if not n.is_free())
     out = {"off_path_share": (total - crit) / total, "fleets": []}

@@ -20,12 +20,35 @@ from .schedulers import (
     get_scheduler,
     schedule_replicated,
 )
+from .simcontext import TIME_SCALE, SimContext
 from .simulator import (
     IMCESimulator,
     MultiTenantSimulator,
     SimResult,
     TenantMetrics,
 )
+
+
+def make_simulator(graph, cost_model=None, engine: str = "exact",
+                   max_in_flight: int = 0):
+    """Simulator factory over the three engines.
+
+    ``engine`` is ``"exact"`` (compiled loop, bit-identical to the
+    historical simulator), ``"periodic"`` (quantized time grid +
+    steady-state early exit; the benchmark default) or ``"reference"``
+    (the frozen pre-compilation loop kept for equivalence testing and
+    honest speedup measurement).  Returns the multi-tenant front-end
+    automatically for :class:`MultiTenantGraph` inputs.
+    """
+    multi = isinstance(graph, MultiTenantGraph)
+    if engine == "reference":
+        from ._sim_reference import (ReferenceMultiTenantSimulator,
+                                     ReferenceSimulator)
+        cls = ReferenceMultiTenantSimulator if multi else ReferenceSimulator
+        return cls(graph, cost_model, max_in_flight)
+    cls = MultiTenantSimulator if multi else IMCESimulator
+    return cls(graph, cost_model, max_in_flight, mode=engine)
+
 
 __all__ = [
     "CostModel",
@@ -53,4 +76,7 @@ __all__ = [
     "MultiTenantSimulator",
     "SimResult",
     "TenantMetrics",
+    "SimContext",
+    "TIME_SCALE",
+    "make_simulator",
 ]

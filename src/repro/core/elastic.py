@@ -20,6 +20,18 @@ records which path ran.
 ``ElasticSession`` tracks the live fleet, produces assignments, and
 reports the degradation curve (rate/latency after each failure) — see
 benchmarks/elastic_bench.py and examples/elastic_reschedule.py.
+
+Simulation engine reuse
+-----------------------
+Every elastic event re-measures the fleet in the discrete-event
+simulator.  The session holds one simulator per serving graph and the
+compiled :class:`~repro.core.simcontext.SimContext` (topo order, bottom
+levels, adjacency, phase tables) is cached on the graph itself, so
+repeated events over the same serving graph — the common case: every
+``join``/reschedule serves the original graph object — re-derive
+nothing.  ``engine`` selects the measurement engine (``"exact"``
+default; benchmarks pass ``"periodic"`` for the quantized early-exit
+loop, see ``repro.core.simulator``).
 """
 
 from __future__ import annotations
@@ -27,10 +39,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from . import make_simulator
 from .cost import CostModel, PUSpec
 from .graph import Graph, MultiTenantGraph
 from .schedulers import Assignment, get_scheduler
-from .simulator import IMCESimulator, MultiTenantSimulator, SimResult
+from .simulator import SimResult
 
 
 @dataclass
@@ -54,13 +67,18 @@ class ElasticSession:
 
     def __init__(self, graph: Graph, pus: Sequence[PUSpec],
                  algorithm: Optional[str] = None,
-                 cost_model: Optional[CostModel] = None) -> None:
+                 cost_model: Optional[CostModel] = None,
+                 engine: str = "exact") -> None:
         self.g = graph
         self.cm = cost_model or CostModel()
         self._multi = isinstance(graph, MultiTenantGraph)
         self.algorithm = algorithm or ("lblp-mt" if self._multi else "lblp")
+        self.engine = engine
         self.live: List[PUSpec] = list(pus)
         self.history: List[ElasticEvent] = []
+        # one simulator per serving graph; its compiled SimContext is
+        # additionally cached on the graph, so neither is rebuilt per event
+        self._sims: Dict[int, tuple] = {}
         self._schedule(None)
 
     # -- internals -------------------------------------------------------
@@ -73,13 +91,21 @@ class ElasticSession:
         serving = a.meta.get("replicated_graph", self.g)
         self._record(failed, serving, a, recovery="schedule")
 
+    def _sim_for(self, serving: Graph):
+        hit = self._sims.get(id(serving))
+        if hit is not None and hit[0] is serving:
+            return hit[1]
+        if len(self._sims) >= 8:
+            self._sims.clear()
+        sim = make_simulator(serving, self.cm, engine=self.engine)
+        self._sims[id(serving)] = (serving, sim)
+        return sim
+
     def _record(self, failed: Optional[int], serving: Graph,
                 a: Assignment, recovery: str) -> None:
         self.serving_graph: Graph = serving
         self.assignment = a
-        sim_cls = (MultiTenantSimulator
-                   if isinstance(serving, MultiTenantGraph) else IMCESimulator)
-        res: SimResult = sim_cls(serving, self.cm).run(a, frames=64)
+        res: SimResult = self._sim_for(serving).run(a, frames=64)
         self.history.append(ElasticEvent(
             failed_pu=failed,
             n_pus=len(self.live),

@@ -185,6 +185,9 @@ class Graph:
     def _invalidate(self) -> None:
         self._topo_cache = None
         self._anc_cache = None
+        # compiled simulation contexts (core.simcontext) are derived from
+        # the structure; any mutation makes them stale
+        self.__dict__.pop("_sim_contexts", None)
 
     # -- queries ----------------------------------------------------------
     def successors(self, nid: int) -> List[int]:

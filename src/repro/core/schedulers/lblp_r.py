@@ -62,7 +62,8 @@ class LBLPRScheduler(Scheduler):
     def __init__(self, cost_model=None, branch_constraint: bool = True,
                  replica_budget: Optional[int] = None,
                  min_gain: float = 0.02,
-                 validate_rate: Optional[int] = None) -> None:
+                 validate_rate: Optional[int] = None,
+                 sim_engine: str = "exact") -> None:
         super().__init__(cost_model)
         self.branch_constraint = branch_constraint
         #: max number of extra replicas to add; None -> fleet size
@@ -72,6 +73,11 @@ class LBLPRScheduler(Scheduler):
         #: simulate both candidates for this many frames and revert if the
         #: replicated schedule's measured rate regresses (None = bound only)
         self.validate_rate = validate_rate
+        #: simulation engine for the validation probes ("exact" default;
+        #: benchmarks pass "periodic" — both candidates are always
+        #: measured with the same engine, so the accept/revert decision
+        #: is self-consistent)
+        self.sim_engine = sim_engine
 
     def _inner(self, g: Graph) -> Scheduler:
         if isinstance(g, MultiTenantGraph) and len(g.tenants) > 1:
@@ -143,8 +149,10 @@ class LBLPRScheduler(Scheduler):
             counts, best_g, best_a, extra = {}, g, base_a, 0
             best_bound = base_bound
         elif self.validate_rate and counts:
-            if measured_rate(best_g, best_a, cm, self.validate_rate) \
-                    < measured_rate(g, base_a, cm, self.validate_rate):
+            if measured_rate(best_g, best_a, cm, self.validate_rate,
+                             engine=self.sim_engine) \
+                    < measured_rate(g, base_a, cm, self.validate_rate,
+                                    engine=self.sim_engine):
                 counts, best_g, best_a, extra = {}, g, base_a, 0
                 best_bound = base_bound
 
@@ -162,7 +170,7 @@ class LBLPRScheduler(Scheduler):
 
 
 def measured_rate(g: Graph, a: Assignment, cm: Optional[CostModel],
-                  frames: int) -> float:
+                  frames: int, sim=None, engine: str = "exact") -> float:
     """Simulated saturated processing rate of ``a`` over ``g`` (aggregate
     tenant rate on multi-tenant unions) — the validation metric lblp-r
     and the replication benchmark share.
@@ -171,12 +179,35 @@ def measured_rate(g: Graph, a: Assignment, cm: Optional[CostModel],
     passes of ``run()`` cost ~2x more simulator work and do not affect
     the rate); the values are identical to ``SimResult.rate`` /
     ``sum(tenants[*].rate)`` from a full ``run()`` at the same frames.
+
+    Callers probing the same graph repeatedly can pass a prebuilt
+    ``sim`` to share one engine; otherwise one is built here — cheap
+    either way, because the compiled ``SimContext`` (topo order, bottom
+    levels, adjacency) is cached on the graph object and the
+    per-assignment ``ExecPlan`` on the context, so repeated probes stop
+    re-deriving graph structure.  ``engine`` selects the simulation
+    engine for freshly built simulators (see
+    :func:`repro.core.make_simulator`).
     """
     # imported here: simulator -> schedulers.base is the layering; this
     # validation hook is the one place the arrow points back
-    from ..simulator import IMCESimulator, MultiTenantSimulator
+    from .. import make_simulator
+    if sim is None:
+        sim = make_simulator(g, cm, engine=engine)
+    # the rate is a deterministic function of (mapping, fleet, frames,
+    # engine) over this context's graph: memoize by content, because the
+    # lblp-r budget sweep re-derives identical candidate schedules as
+    # fresh objects (the id-keyed ExecPlan cache cannot see that)
+    memo = getattr(sim, "_ctx", None) and sim._ctx.memo
+    key = None
+    if memo is not None:
+        key = ("measured_rate", type(sim).__name__, sim.mode, frames,
+               tuple(sorted(a.mapping.items())),
+               tuple((p.pu_id, p.pu_type, p.speed) for p in a.pus))
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
     if isinstance(g, MultiTenantGraph) and len(g.tenants) > 1:
-        sim = MultiTenantSimulator(g, cm)
         _, completions, _, _, _ = sim._run_streams(
             a, {t: frames for t in g.tenants},
             in_flight=len(a.pus) + 2)
@@ -184,12 +215,16 @@ def measured_rate(g: Graph, a: Assignment, cm: Optional[CostModel],
         for comps in completions.values():
             interval, _ = sim._steady_state(comps)
             total += 1.0 / interval if interval > 0 else math.inf
-        return total
-    sim = IMCESimulator(g, cm)
-    _, completions, _, _ = sim._simulate(a, frames=frames,
-                                         in_flight=len(a.pus) + 2)
-    interval, _ = sim._steady_state(completions)
-    return 1.0 / interval if interval > 0 else math.inf
+    else:
+        _, completions, _, _ = sim._simulate(a, frames=frames,
+                                             in_flight=len(a.pus) + 2)
+        interval, _ = sim._steady_state(completions)
+        total = 1.0 / interval if interval > 0 else math.inf
+    if key is not None:
+        if len(memo) >= 256:
+            memo.clear()
+        memo[key] = total
+    return total
 
 
 def schedule_replicated(g: Graph, pus: Sequence[PUSpec],

@@ -70,27 +70,31 @@ class OptimalScheduler(Scheduler):
             for i in range(len(sub) - 1, -1, -1):
                 suffix[i] = suffix[i + 1] + times[i]
 
+            n_sub, n_fleet = len(sub), len(fleet)
+
             def dfs(i: int) -> None:
                 if expansions[0] > self.max_expansions:
                     return
                 expansions[0] += 1
-                if i == len(sub):
+                if i == n_sub:
                     b = max(loads)
                     if b < incumbent[0]:
                         incumbent[0] = b
                         best_assign[0] = list(assign)
                     return
                 # relaxation bound: even perfectly spreading the rest can't
-                # get below max(current max-free average, biggest single item)
+                # get below max(current max-free average, biggest single
+                # item); loads are non-negative so max(loads) needs no
+                # emptiness/zero guard
                 lb = max(
-                    max(loads) if any(loads) else 0.0,
-                    (sum(loads) + suffix[i]) / len(fleet),
+                    max(loads),
+                    (sum(loads) + suffix[i]) / n_fleet,
                     times[i],
                 )
                 if lb >= incumbent[0] - 1e-15:
                     return
                 seen_empty = False
-                order = sorted(range(len(fleet)), key=lambda j: loads[j])
+                order = sorted(range(n_fleet), key=loads.__getitem__)
                 for j in order:
                     if loads[j] == 0.0:
                         if seen_empty:

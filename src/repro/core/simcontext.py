@@ -1,0 +1,325 @@
+"""Precompiled simulation contexts: the simulator's compiled core.
+
+The discrete-event loop used to re-derive everything it needs from the
+``Graph``/``CostModel`` objects on every call: predecessor/successor
+dicts, per-node execution times (a ``CostModel.time`` call per event),
+transfer costs, replica activity checks, and ``(stream, frame, node)``
+tuple-keyed state dicts.  Profiling showed those lookups — not the heap
+operations — dominating the loop.  A :class:`SimContext` hoists all of
+it out of the hot path, once per (graph, cost model, stream structure):
+
+* nodes renumbered to dense ``0..N-1`` indices in topological order,
+* predecessor/successor adjacency as flat index tuples,
+* bottom levels (the list-scheduling tiebreak) as a dense array,
+* cross-PU transfer cost per producer node,
+* replica round-robin activity precompiled per frame *phase*
+  (``f % lcm(replica counts)``): per-phase missing-predecessor counts,
+  initially-ready nodes, sink counts and active-successor lists,
+* per-stream membership with the exact iteration orders the historical
+  loop used (so event sequence numbers — and therefore results — are
+  bit-identical).
+
+Contexts are cached on the graph object itself (invalidated whenever
+the graph mutates) and shared by every simulator instance built over
+the same graph: the three measurement passes inside ``run()``, every
+``lblp-r`` ``validate_rate`` probe, every ``ElasticSession`` event and
+every benchmark sweep cell reuse one compiled structure.
+
+Per-assignment state (which PU executes which node, at which speed) is
+compiled separately into an :class:`ExecPlan` — per-node execution
+times and per-edge transfer costs as dense arrays — and cached on the
+context keyed by assignment identity, so repeated runs of the same
+mapping (the common case) compile once.
+
+Quantized time grid ("periodic" mode)
+-------------------------------------
+``ExecPlan`` can quantize all costs onto an integer picosecond grid
+(held in floats, exact below 2**53).  On that grid the closed-loop
+simulator state provably recurs — enabling the exact-match steady-state
+early exit in ``simulator.py`` — at the price of ~1e-6 relative
+rounding on reported times versus the default exact mode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cost import CostModel
+from .graph import Graph
+
+#: quantized-mode time grid: 1 tick = 1 picosecond.  Integer-valued
+#: floats stay exact under +/max up to 2**53 ticks (~2.5 hours of
+#: simulated time), far beyond any benchmark horizon.
+TIME_SCALE = 1e12
+
+#: replica phase tables are precompiled when the lcm of all replica
+#: counts is at most this; beyond it the loop falls back to computing
+#: activity per injection (identical results, just slower).
+MAX_PHASE_PERIOD = 64
+
+
+def _phase_period(counts: Sequence[int]) -> int:
+    out = 1
+    for c in counts:
+        if c > 1:
+            out = out * c // math.gcd(out, c)
+            if out > MAX_PHASE_PERIOD:
+                return out
+    return out
+
+
+class ExecPlan:
+    """Per-(context, assignment) compiled execution arrays."""
+
+    __slots__ = ("pu_ids", "pu_index", "pu_of", "exec_t", "arrive", "quantized")
+
+    def __init__(self, ctx: "SimContext", cm: CostModel, a, quantized: bool) -> None:
+        g = ctx.graph
+        self.quantized = quantized
+        self.pu_ids: List[int] = [p.pu_id for p in a.pus]
+        self.pu_index: Dict[int, int] = {pid: i for i, pid in enumerate(self.pu_ids)}
+        specs = {p.pu_id: p for p in a.pus}
+
+        # free nodes ride on any PU at zero cost; pin them to a successor's
+        # (or predecessor's) PU so transfers are accounted sensibly — the
+        # historical loop's rule, preserved verbatim (successors first,
+        # earlier topo nodes pinned first, fleet head as last resort).
+        pu_by_id = dict(a.mapping)
+        for nid in ctx.ids:
+            if nid not in pu_by_id:
+                nbr = g.successors(nid) + g.predecessors(nid)
+                pu_by_id[nid] = next(
+                    (pu_by_id[m] for m in nbr if m in pu_by_id), a.pus[0].pu_id
+                )
+        self.pu_of: List[int] = [self.pu_index[pu_by_id[nid]] for nid in ctx.ids]
+
+        # per-node execution times come from context-level tables keyed by
+        # (pu_type, speed) — schedulers probing many candidate mappings
+        # (lblp-x refine, lblp-r validation) rebuild plans often, and the
+        # table lookup keeps that free of CostModel calls
+        tables = {
+            key: ctx.exec_table(spec.pu_type, spec.speed, quantized)
+            for key, spec in specs.items()
+        }
+        pu_arr = [pu_by_id[nid] for nid in ctx.ids]
+        self.exec_t: List[float] = [
+            tables[pu_arr[j]][j] for j in range(ctx.n)
+        ]
+
+        # per phase, per node: (successor index, transfer cost) pairs for
+        # the successors active at that phase (all of them when P == 1)
+        xfer = ctx.xfer_table(quantized)
+        pu_of = self.pu_of
+        self.arrive: List[List[Tuple[Tuple[int, float], ...]]] = []
+        for ph in range(len(ctx.succs_by_phase)):
+            per_node = []
+            for j in range(ctx.n):
+                cost = xfer[j]
+                per_node.append(
+                    tuple(
+                        (k, 0.0 if pu_of[k] == pu_of[j] else cost)
+                        for k in ctx.succs_by_phase[ph][j]
+                    )
+                )
+            self.arrive.append(per_node)
+
+
+class SimContext:
+    """Dense-index compiled view of one (graph, cost model, streams)."""
+
+    def __init__(self, graph: Graph, cm: CostModel,
+                 structure: Tuple[List[str], Dict[str, List[int]],
+                                  Dict[str, List[int]], Dict[str, List[int]],
+                                  Dict[int, str]]) -> None:
+        self.graph = graph
+        streams, members, sources, sinks, stream_of = structure
+        order = graph.topo_order()
+        self.n = len(order)
+        self.ids: Tuple[int, ...] = tuple(order)
+        self.idx: Dict[int, int] = {nid: j for j, nid in enumerate(order)}
+        idx = self.idx
+        self.preds: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(idx[p] for p in graph.predecessors(nid)) for nid in order
+        )
+        self.succs: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(idx[s] for s in graph.successors(nid)) for nid in order
+        )
+        self.free: Tuple[bool, ...] = tuple(
+            graph.nodes[nid].is_free() for nid in order
+        )
+
+        # bottom levels over native execution times (the historical
+        # `_bottom_levels`, bit-identical float computation)
+        bl: Dict[int, float] = {}
+        for nid in reversed(order):
+            t = 0.0 if graph.nodes[nid].is_free() else cm.time(graph.nodes[nid])
+            if math.isinf(t):
+                t = 0.0
+            succ = graph.successors(nid)
+            bl[nid] = t + max((bl[s] for s in succ), default=0.0)
+        self.blevel_by_id = bl
+        self.negbl: Tuple[float, ...] = tuple(-bl[nid] for nid in order)
+
+        self.xfer_cross: Tuple[float, ...] = tuple(
+            cm.transfer(graph.nodes[nid], same_pu=False) for nid in order
+        )
+
+        # replica round-robin tags
+        rep_cnt = [graph.nodes[nid].replica_count for nid in order]
+        rep_idx = [graph.nodes[nid].meta.get("replica_index", 0) for nid in order]
+        self.rep_cnt, self.rep_idx = tuple(rep_cnt), tuple(rep_idx)
+        self.replicated = any(c > 1 for c in rep_cnt)
+        period = _phase_period(rep_cnt) if self.replicated else 1
+        self.phases_compiled = period <= MAX_PHASE_PERIOD
+        self.phase_period = period if self.phases_compiled else 1
+
+        # streams (dense)
+        self.stream_keys: List[str] = list(streams)
+        self.members: List[List[int]] = [
+            [idx[nid] for nid in members[s]] for s in streams
+        ]
+        self.sources: List[List[int]] = [
+            [idx[nid] for nid in sources[s]] for s in streams
+        ]
+        self.n_sinks: List[int] = [len(sinks[s]) for s in streams]
+        self.stream_of: List[int] = [0] * self.n
+        skey = {s: i for i, s in enumerate(streams)}
+        for nid, s in stream_of.items():
+            self.stream_of[idx[nid]] = skey[s]
+
+        self._compile_phases()
+        self._cm = cm
+        self._plans: Dict[Tuple[int, bool], Tuple[object, ExecPlan]] = {}
+        self._exec_tables: Dict[tuple, Tuple[float, ...]] = {}
+        self._xfer_tables: Dict[bool, Tuple[float, ...]] = {}
+        #: scratch memo for derived deterministic figures (e.g. the
+        #: measured_rate cache in schedulers.lblp_r), keyed by content
+        self.memo: Dict[tuple, object] = {}
+
+    # -- cost tables ---------------------------------------------------------
+    def exec_table(self, pu_type, speed: float,
+                   quantized: bool) -> Tuple[float, ...]:
+        """Per-node execution times on a (pu_type, speed) unit; free
+        nodes cost 0.  Quantized tables live on the integer tick grid."""
+        key = (pu_type, speed, quantized)
+        tab = self._exec_tables.get(key)
+        if tab is None:
+            g, cm = self.graph, self._cm
+            raw = [
+                0.0 if g.nodes[nid].is_free()
+                else cm.time(g.nodes[nid], pu_type, speed)
+                for nid in self.ids
+            ]
+            if quantized:
+                raw = [t if t == math.inf else float(round(t * TIME_SCALE))
+                       for t in raw]
+            tab = self._exec_tables[key] = tuple(raw)
+        return tab
+
+    def xfer_table(self, quantized: bool) -> Tuple[float, ...]:
+        """Cross-PU transfer cost per producer node."""
+        tab = self._xfer_tables.get(quantized)
+        if tab is None:
+            raw = self.xfer_cross
+            if quantized:
+                raw = tuple(t if t == math.inf else float(round(t * TIME_SCALE))
+                            for t in raw)
+            tab = self._xfer_tables[quantized] = tuple(raw)
+        return tab
+
+    # -- replica phase tables ---------------------------------------------
+    def active(self, j: int, f: int) -> bool:
+        c = self.rep_cnt[j]
+        return c == 1 or f % c == self.rep_idx[j]
+
+    def _compile_phases(self) -> None:
+        """Per-phase activity tables (phase = frame % lcm of replica
+        counts): active-successor lists, per-stream initial missing
+        counts, initially-ready nodes and sink counts — everything the
+        historical per-frame ``inject``/``finish`` recomputed."""
+        P = self.phase_period
+        if not self.phases_compiled:
+            # dynamic fallback: single table with full successor lists;
+            # the loop recomputes activity per injected frame instead
+            self.succs_by_phase = [self.succs]
+            self.base_missing = None
+            self.init_ready = None
+            self.phase_sinks = None
+            return
+        if not self.replicated:
+            self.succs_by_phase = [self.succs]
+            self.base_missing = [
+                [[len(self.preds[j]) for j in range(self.n)]]
+                for _ in self.stream_keys
+            ]
+            self.init_ready = [[list(src)] for src in self.sources]
+            self.phase_sinks = [[c] for c in self.n_sinks]
+            return
+        self.succs_by_phase = [
+            tuple(
+                tuple(k for k in self.succs[j] if self.active(k, ph))
+                for j in range(self.n)
+            )
+            for ph in range(P)
+        ]
+        self.base_missing = []
+        self.init_ready = []
+        self.phase_sinks = []
+        for s, _ in enumerate(self.stream_keys):
+            miss_by_phase, ready_by_phase, sinks_by_phase = [], [], []
+            for ph in range(P):
+                miss = [0] * self.n
+                ready: List[int] = []
+                sinks = 0
+                # member order matters: the historical loop pushed the
+                # "ready" events in this exact iteration order
+                for j in self.members[s]:
+                    if not self.active(j, ph):
+                        continue
+                    miss[j] = sum(1 for p in self.preds[j] if self.active(p, ph))
+                    if not any(self.active(k, ph) for k in self.succs[j]):
+                        sinks += 1
+                    if miss[j] == 0:
+                        ready.append(j)
+                miss_by_phase.append(miss)
+                ready_by_phase.append(ready)
+                sinks_by_phase.append(sinks)
+            self.base_missing.append(miss_by_phase)
+            self.init_ready.append(ready_by_phase)
+            self.phase_sinks.append(sinks_by_phase)
+
+    # -- per-assignment plans ----------------------------------------------
+    def plan(self, a, cm: CostModel, quantized: bool) -> ExecPlan:
+        """Compiled execution arrays for ``a``; cached by identity so the
+        passes of ``run()`` (and re-runs of a stored schedule) share one
+        compilation."""
+        key = (id(a), quantized)
+        hit = self._plans.get(key)
+        if hit is not None and hit[0] is a:
+            return hit[1]
+        if len(self._plans) >= 8:
+            self._plans.clear()
+        plan = ExecPlan(self, cm, a, quantized)
+        self._plans[key] = (a, plan)
+        return plan
+
+    # -- cache -------------------------------------------------------------
+    @staticmethod
+    def for_graph(graph: Graph, cm: CostModel, kind: str,
+                  structure_fn) -> "SimContext":
+        """Fetch (or build) the context for ``graph`` under ``cm``.
+
+        Cached on the graph object (cleared by ``Graph._invalidate`` on
+        any mutation) keyed by the stream-structure kind and the cost
+        model's calibration, so different hardware profiles and
+        single-vs-multi-tenant views coexist."""
+        cache: Optional[dict] = getattr(graph, "_sim_contexts", None)
+        if cache is None:
+            cache = graph._sim_contexts = {}
+        key = (kind, type(cm), cm.profile)
+        ctx = cache.get(key)
+        if ctx is None:
+            ctx = SimContext(graph, cm, structure_fn())
+            cache[key] = ctx
+        return ctx

@@ -16,19 +16,59 @@ Model
 * Fused activations cost nothing (inside the PU datapath), matching the
   IMCE.
 
-One event loop
---------------
+One event loop, compiled
+------------------------
 There is exactly one event-loop implementation, ``_run_streams``: it
 executes any number of *frame streams* over the graph.  A plain
 single-model run is the 1-stream special case (``IMCESimulator``); a
 multi-tenant union drives one stream per tenant
-(``MultiTenantSimulator``).  The subclasses differ only in the
-``_stream_view`` they hand the loop and in how ``run`` aggregates the
-results — the ready-queue order for one stream is provably identical to
-the historical single-tenant simulator (the stream's virtual-time key
-``f * weight`` is strictly monotone in ``f`` for a constant weight), and
-``tests/test_sim_equivalence.py`` pins bit-identical results on the
-paper-validation graphs.
+(``MultiTenantSimulator``).  The subclasses differ only in the stream
+structure/weights they hand the loop and in how ``run`` aggregates the
+results.
+
+The loop runs over a precompiled :class:`~repro.core.simcontext.SimContext`:
+nodes renumbered to dense ``0..N-1`` indices with flat adjacency,
+bottom levels, per-node execution/transfer times and replica phase
+tables all hoisted out of the hot path, and per-frame state held in
+preallocated slot arrays instead of ``(stream, frame, node)`` dicts.
+Contexts are cached on the graph and shared across the three passes of
+``run()``, across ``lblp-r`` ``validate_rate`` probes, across
+``ElasticSession`` events and across benchmark sweep cells.  The event
+sequence is identical to the historical dict-keyed loop (kept in
+``core._sim_reference`` as an oracle): in the default ``mode="exact"``
+every returned float is bit-identical, pinned by
+``tests/test_sim_equivalence.py`` goldens and the property tests in
+``tests/test_sim_property.py``.
+
+Periodic steady-state early exit (``mode="periodic"``)
+------------------------------------------------------
+Deterministic closed-loop runs settle into an exactly periodic regime:
+once the complete simulator state (per-PU ready queues, in-flight frame
+progress, pending events — all relative to the current time and frame
+count) recurs, the future is the past shifted by one period, so the
+loop can extrapolate the remaining completions, injections and busy
+intervals instead of simulating them.  Exact recurrence almost never
+happens in floating point (absolute-time rounding perturbs relative
+gaps by ulps), so ``mode="periodic"`` quantizes all execution and
+transfer costs onto an integer picosecond grid (exact float arithmetic
+below 2**53) where recurrence provably fires, detects it with
+exact-match state fingerprints taken at frame completions, and
+extrapolates *exactly* on that grid; results are converted back to
+seconds on return.  Consequences:
+
+* reported times differ from ``mode="exact"`` only by the ~1e-6
+  relative cost quantization (well under the model's fidelity);
+* the extrapolated tail reports the *infinite-stream periodic regime*
+  sampled for ``frames`` completions — the finite-budget drain tail
+  (slightly less contention for the last ``in_flight`` frames) is
+  excluded by design, which is the better steady-state estimate;
+* open-loop (``rates=``) and multi-stream runs never early-exit (the
+  fair-queueing interleaving is not frame-shift invariant); they still
+  benefit from the compiled loop and the quantized grid.
+
+Benchmarks opt in via ``mode="periodic"`` (see ``benchmarks/common.py``
+and ``python -m benchmarks.run sim_speed``); library defaults stay
+``"exact"``.
 
 Layer replication (LRMP-style)
 ------------------------------
@@ -62,14 +102,27 @@ replicating the bottleneck node.
 
 from __future__ import annotations
 
-import heapq
 import math
+from collections import deque
 from dataclasses import dataclass, field
+from heapq import heappop, heappush
 from typing import Dict, List, Optional, Tuple
 
 from .cost import CostModel
 from .graph import Graph, MultiTenantGraph
 from .schedulers.base import Assignment
+from .simcontext import TIME_SCALE, SimContext
+
+# event kinds of the compiled loop (ints: never compared by the heap —
+# the (time, seq) prefix is already a total order — but cheap to branch on)
+_INJECT, _READY, _ARRIVE, _DISPATCH, _DONE, _COMPLETE = range(6)
+
+#: steady-state detection arms only at or beyond this per-stream frame
+#: budget (smaller runs have no tail worth extrapolating)
+_DETECT_MIN_FRAMES = 24
+#: cap on remembered state fingerprints per run (memory guard; a run
+#: whose state never recurs within the cap simply completes normally)
+_DETECT_MAX_STATES = 512
 
 
 @dataclass
@@ -112,7 +165,9 @@ class _StreamView:
     ``MultiTenantSimulator`` exposes one per tenant.  ``weight`` is the
     stream's virtual-time increment per frame (start-time fair queueing);
     for a single stream any positive constant yields the historical
-    frame-number ordering.
+    frame-number ordering.  (The compiled loop consumes the same
+    structure via ``SimContext``; this view object remains the interface
+    of the reference loop in ``core._sim_reference``.)
     """
 
     streams: List[str]
@@ -124,25 +179,32 @@ class _StreamView:
 
 
 class IMCESimulator:
-    """Event-driven executor of an ``Assignment`` over a ``Graph``."""
+    """Event-driven executor of an ``Assignment`` over a ``Graph``.
+
+    ``mode="exact"`` (default) reproduces the historical event loop
+    bit-for-bit; ``mode="periodic"`` runs on the quantized time grid
+    with steady-state early exit (see module docstring).
+    """
+
+    _context_kind = "single"
 
     def __init__(self, graph: Graph, cost_model: Optional[CostModel] = None,
-                 max_in_flight: int = 0) -> None:
+                 max_in_flight: int = 0, mode: str = "exact") -> None:
         self.g = graph
         self.cm = cost_model or CostModel()
         self.max_in_flight = max_in_flight  # 0 -> auto (=|PUs|+2)
-        # bottom levels for the list-scheduling tiebreak
-        self._blevel = self._bottom_levels()
-
-    def _bottom_levels(self) -> Dict[int, float]:
-        bl: Dict[int, float] = {}
-        for nid in reversed(self.g.topo_order()):
-            t = self.cm.time(self.g.nodes[nid]) if not self.g.nodes[nid].is_free() else 0.0
-            if math.isinf(t):
-                t = 0.0
-            succ = self.g.successors(nid)
-            bl[nid] = t + max((bl[s] for s in succ), default=0.0)
-        return bl
+        if mode not in ("exact", "periodic"):
+            raise ValueError(f"mode must be 'exact' or 'periodic', got {mode!r}")
+        self.mode = mode
+        # compiled structure, shared via the graph-level cache
+        self._ctx = SimContext.for_graph(
+            graph, self.cm, self._context_kind, self._stream_structure)
+        self._blevel = self._ctx.blevel_by_id
+        #: events processed by the most recent ``_run_streams`` call
+        self.last_events = 0
+        #: ``(frames_per_period, period_seconds)`` when the most recent
+        #: run early-exited, else None
+        self.last_early_exit: Optional[Tuple[int, float]] = None
 
     # -- public API -----------------------------------------------------------
     def run(self, assignment: Assignment, frames: int = 64) -> SimResult:
@@ -187,20 +249,25 @@ class IMCESimulator:
         latency, _, _, _ = self._simulate(assignment, frames=1, in_flight=1)
         return latency
 
-    # -- stream view ----------------------------------------------------------
-    def _stream_view(self, a: Assignment) -> _StreamView:
-        """One stream spanning the whole graph (single-model serving)."""
+    # -- stream structure ------------------------------------------------------
+    def _stream_structure(self):
+        """One stream spanning the whole graph (single-model serving):
+        ``(streams, members, sources, sinks, stream_of)`` with node ids."""
         g = self.g
         key = g.name
         order = g.topo_order()
-        return _StreamView(
-            streams=[key],
-            nodes={key: order},
-            sources={key: g.sources()},
-            sinks={key: g.sinks()},
-            stream_of={n: key for n in order},
-            weight={key: 1.0},  # one stream: any constant == frame order
-        )
+        return ([key], {key: order}, {key: g.sources()}, {key: g.sinks()},
+                {n: key for n in order})
+
+    def _stream_weights(self, a: Assignment) -> Dict[str, float]:
+        """Virtual-time weight per stream; any constant for one stream."""
+        return {self.g.name: 1.0}
+
+    def _stream_view(self, a: Assignment) -> _StreamView:
+        """Legacy view object (consumed by the reference loop)."""
+        streams, nodes, sources, sinks, stream_of = self._stream_structure()
+        return _StreamView(streams, nodes, sources, sinks, stream_of,
+                           self._stream_weights(a))
 
     # -- internals -----------------------------------------------------------
     def _per_frame_busy(self, a: Assignment) -> Dict[int, float]:
@@ -228,7 +295,7 @@ class IMCESimulator:
     ) -> Tuple[float, Dict[str, List[float]],
                Dict[int, List[Tuple[float, float]]],
                Dict[str, List[float]], Dict[str, Dict[int, float]]]:
-        """THE event loop: stream-keyed frames over one graph.
+        """THE event loop: stream-keyed frames over one graph, compiled.
 
         A frame instance is ``(stream, f)`` and only traverses the
         stream's member nodes; replicated nodes additionally serve only
@@ -241,180 +308,366 @@ class IMCESimulator:
         busy intervals per PU, sojourns-by-stream,
         busy-by-stream-by-PU)``.
         """
-        g, cm = self.g, self.cm
-        view = self._stream_view(a)
+        ctx = self._ctx
+        quant = self.mode == "periodic"
+        plan = ctx.plan(a, self.cm, quant)
+        skeys = ctx.stream_keys
+        S = len(skeys)
         if isinstance(frames, int):
-            frames = {s: frames for s in view.streams}
-        order = g.topo_order()
-        preds = {n: g.predecessors(n) for n in order}
-        succs = {n: g.successors(n) for n in order}
-        streams = view.streams
+            frames = {s: frames for s in skeys}
+        fcount = [frames[s] for s in skeys]
+        wts = self._stream_weights(a)
+        w_arr = [wts[s] for s in skeys]
 
-        pu_of = dict(a.mapping)
-        # free nodes ride on any PU at zero cost; pin them to a successor's
-        # (or predecessor's) PU so transfers are accounted sensibly.
-        for nid in order:
-            if nid not in pu_of:
-                nbr = succs[nid] + preds[nid]
-                pu_of[nid] = next(
-                    (pu_of[m] for m in nbr if m in pu_of), a.pus[0].pu_id
-                )
-        speed = {p.pu_id: p for p in a.pus}
+        n = ctx.n
+        node_ids = ctx.ids
+        negbl = ctx.negbl
+        exec_t = plan.exec_t
+        pu_of = plan.pu_of
+        npu = len(plan.pu_ids)
+        members = ctx.members
+        preds = ctx.preds
+        succs = ctx.succs
+        is_active = ctx.active
 
-        # round-robin replica routing: replica i of a k-group exists only
-        # for the frames with f % k == i (Graph.replicate)
-        rep_cnt = {n: g.nodes[n].replica_count for n in order}
-        rep_idx = {n: g.nodes[n].meta.get("replica_index", 0) for n in order}
-        replicated = any(c > 1 for c in rep_cnt.values())
+        replicated = ctx.replicated
+        phased = ctx.phases_compiled
+        period = ctx.phase_period
+        dyn = replicated and not phased
+        arrive_tbl = plan.arrive
+        arrive_0 = arrive_tbl[0]
+        base_missing = ctx.base_missing
+        init_ready = ctx.init_ready
+        phase_sinks = ctx.phase_sinks
 
-        def active(nid: int, f: int) -> bool:
-            c = rep_cnt[nid]
-            return c == 1 or f % c == rep_idx[nid]
-
-        def exec_time(nid: int) -> float:
-            node = g.nodes[nid]
-            if node.is_free():
-                return 0.0
-            pu = speed[pu_of[nid]]
-            return cm.time(node, pu.pu_type, pu.speed)
-
-        # state
-        evq: List[Tuple[float, int, str, tuple]] = []
+        # events are (time, seq, kind, x, y, z); processing order is the
+        # total order by (time, seq), exactly the historical heap order.
+        # Two lanes carry them: `evq` (heap) for future events and `dq`
+        # (FIFO) for events scheduled at the current instant — same-time
+        # events dominate (ready/dispatch/complete, zero-cost transfers)
+        # and a deque append/popleft is far cheaper than a heap sift.
+        # Routing is a pure optimization: the merge pop below compares
+        # (time, seq) across both lanes, so any routing is correct.
+        evq: List[Tuple[float, int, int, int, int, int]] = []
+        dq: deque = deque()
+        now = None  # time of the event being processed
         seq = 0
 
-        def push(t: float, kind: str, payload: tuple) -> None:
+        # per-frame-slot state (slot = one in-flight frame instance)
+        slot_stream: List[int] = []
+        slot_frame: List[int] = []
+        slot_left: List[int] = []
+        slot_missing: List[Optional[List[int]]] = []
+        free_slots: List[int] = []
+
+        inject_t: List[List[Optional[float]]] = [[None] * fcount[s] for s in range(S)]
+        complete_t: List[List[Optional[float]]] = [[None] * fcount[s] for s in range(S)]
+        injected = [0] * S
+        completions: List[List[float]] = [[] for _ in range(S)]
+        ready_q: List[List[tuple]] = [[] for _ in range(npu)]
+        pu_free_at = [0.0] * npu
+        pu_idle = [True] * npu
+        busy_iv: List[List[Tuple[float, float]]] = [[] for _ in range(npu)]
+        stream_busy = [[0.0] * npu for _ in range(S)]
+
+        detect = (quant and rates is None and S == 1 and not dyn
+                  and fcount and fcount[0] >= _DETECT_MIN_FRAMES)
+        # an exact state match is sound even mid-transient (identical
+        # state => identical future), so arm as soon as the pipeline can
+        # possibly have filled
+        warmup = max(in_flight, 4)
+        fp_map: Dict[tuple, tuple] = {}
+        comp_frames: List[int] = []     # frame id per completions[0] entry
+        busy_frame: List[List[int]] = [[] for _ in range(npu)]
+        self.last_early_exit = None
+
+        def push(t: float, kind: int, x: int, y: int, z: int) -> None:
             nonlocal seq
-            heapq.heappush(evq, (t, seq, kind, payload))
+            if t == now:
+                dq.append((t, seq, kind, x, y, z))
+            else:
+                heappush(evq, (t, seq, kind, x, y, z))
             seq += 1
 
-        missing: Dict[Tuple[str, int, int], int] = {}   # (stream, f, node)
-        inject_time: Dict[Tuple[str, int], float] = {}
-        complete_time: Dict[Tuple[str, int], float] = {}
-        frame_left: Dict[Tuple[str, int], int] = {}
-        injected = {s: 0 for s in streams}
-        n_sinks = {s: len(view.sinks[s]) for s in streams}
-        ready_q: Dict[int, List[Tuple[float, int, float, int, float]]] = {
-            p.pu_id: [] for p in a.pus
-        }
-        pu_free_at: Dict[int, float] = {p.pu_id: 0.0 for p in a.pus}
-        pu_idle: Dict[int, bool] = {p.pu_id: True for p in a.pus}
-        busy_iv: Dict[int, List[Tuple[float, float]]] = {p.pu_id: [] for p in a.pus}
-        stream_busy: Dict[str, Dict[int, float]] = {
-            s: {p.pu_id: 0.0 for p in a.pus} for s in streams
-        }
-        completions: Dict[str, List[float]] = {s: [] for s in streams}
-
-        def inject(sn: str, f: int, t: float) -> None:
-            inject_time[(sn, f)] = t
-            if not replicated:
-                frame_left[(sn, f)] = n_sinks[sn]
-                for nid in view.nodes[sn]:
-                    missing[(sn, f, nid)] = len(preds[nid])
-                for nid in view.sources[sn]:
-                    push(t, "ready", (sn, f, nid))
+        def inject(s: int, f: int, t: float) -> None:
+            inject_t[s][f] = t
+            if free_slots:
+                slot = free_slots.pop()
+            else:
+                slot = len(slot_frame)
+                slot_stream.append(0)
+                slot_frame.append(0)
+                slot_left.append(0)
+                slot_missing.append(None)
+            slot_stream[slot] = s
+            slot_frame[slot] = f
+            if not dyn:
+                ph = f % period
+                slot_missing[slot] = base_missing[s][ph][:]
+                slot_left[slot] = phase_sinks[s][ph]
+                for j in init_ready[s][ph]:
+                    push(t, _READY, slot, j, 0)
             else:
                 # per-frame view: inactive replicas do not exist for f
+                # (lcm of replica counts too large to precompile phases)
+                miss = [0] * n
                 sinks = 0
-                for nid in view.nodes[sn]:
-                    if not active(nid, f):
+                for j in members[s]:
+                    if not is_active(j, f):
                         continue
-                    missing[(sn, f, nid)] = sum(
-                        1 for p in preds[nid] if active(p, f))
-                    if not any(active(s, f) for s in succs[nid]):
+                    miss[j] = sum(1 for p in preds[j] if is_active(p, f))
+                    if not any(is_active(k, f) for k in succs[j]):
                         sinks += 1
-                    if missing[(sn, f, nid)] == 0:
-                        push(t, "ready", (sn, f, nid))
-                frame_left[(sn, f)] = sinks
-            injected[sn] += 1
+                    if miss[j] == 0:
+                        push(t, _READY, slot, j, 0)
+                slot_missing[slot] = miss
+                slot_left[slot] = sinks
+            injected[s] += 1
 
-        def enqueue_ready(sn: str, f: int, nid: int, t: float) -> None:
-            pid = pu_of[nid]
-            # virtual time first (cross-stream fairness), then per-stream
-            # frame number and the critical-path tiebreak; for a single
-            # stream this is exactly the historical (f, -blevel, nid) order.
-            heapq.heappush(
-                ready_q[pid],
-                (f * view.weight[sn], f, -self._blevel[nid], nid, t))
-            if pu_idle[pid]:
-                push(max(t, pu_free_at[pid]), "dispatch", (pid,))
-
-        def finish(sn: str, f: int, nid: int, t: float) -> None:
-            """Outputs of (stream, f, nid) forward to successors."""
-            node = g.nodes[nid]
-            outs = succs[nid]
-            if replicated:
-                outs = [s for s in outs if active(s, f)]
-            if not outs:
-                frame_left[(sn, f)] -= 1
-                if frame_left[(sn, f)] == 0:
-                    completions[sn].append(t)
-                    complete_time[(sn, f)] = t
-                    push(t, "complete", (sn, f))
-                return
-            for s in outs:
-                xfer = cm.transfer(node, same_pu=(pu_of[s] == pu_of[nid]))
-                push(t + xfer, "arrive", (sn, f, s))
+        def fingerprint(t: float, rel: int) -> tuple:
+            """Canonical relative state at a frame completion: identical
+            fingerprints => identical future evolution shifted in time
+            and frame number (exact on the quantized grid)."""
+            ev = []
+            for (te, _sq, k, x, y, z) in sorted(list(evq) + list(dq)):
+                if k == _READY or k == _ARRIVE:
+                    ev.append((te - t, k, slot_frame[x] - rel, y))
+                elif k == _DISPATCH:
+                    ev.append((te - t, k, x, 0))
+                elif k == _DONE:
+                    ev.append((te - t, k, slot_frame[y] - rel, z, x))
+                else:  # _COMPLETE
+                    ev.append((te - t, k, slot_frame[x] - rel, 0))
+            rq = tuple(
+                tuple(sorted((e[1] - rel, e[3]) for e in ready_q[p]))
+                for p in range(npu)
+            )
+            frees = set(free_slots)
+            slots = tuple(sorted(
+                (slot_frame[i] - rel, slot_left[i], tuple(slot_missing[i]))
+                for i in range(len(slot_frame)) if i not in frees
+            ))
+            return (injected[0] - rel, rel % period if replicated else 0,
+                    tuple(ev), rq, tuple(pu_idle), slots)
 
         # prime / schedule injections
         if rates is not None:
-            for sn in streams:
-                r = rates[sn]
+            for s in range(S):
+                r = rates[skeys[s]]
                 if r <= 0:
-                    raise ValueError(f"rate for stream '{sn}' must be > 0")
-                for f in range(frames[sn]):
-                    push(f / r, "inject", (sn, f))
+                    raise ValueError(f"rate for stream '{skeys[s]}' must be > 0")
+                for f in range(fcount[s]):
+                    ti = f / r
+                    if quant:  # injection times live on the tick grid too
+                        ti = float(round(ti * TIME_SCALE))
+                    push(ti, _INJECT, s, f, 0)
         else:
-            for sn in streams:
-                for f in range(min(in_flight, frames[sn])):
-                    inject(sn, f, 0.0)
+            for s in range(S):
+                for f in range(min(in_flight, fcount[s])):
+                    inject(s, f, 0.0)
 
         makespan = 0.0
-        while evq:
-            t, _, kind, payload = heapq.heappop(evq)
-            makespan = max(makespan, t)
-            if kind == "inject":
-                sn, f = payload
-                inject(sn, f, t)
-            elif kind == "ready":
-                sn, f, nid = payload
-                enqueue_ready(sn, f, nid, t)
-            elif kind == "arrive":
-                sn, f, nid = payload
-                missing[(sn, f, nid)] -= 1
-                if missing[(sn, f, nid)] == 0:
-                    push(t, "ready", (sn, f, nid))
-            elif kind == "dispatch":
-                (pid,) = payload
-                if not pu_idle[pid] or not ready_q[pid]:
+        while True:
+            # merge pop: smallest (time, seq) across the two lanes
+            if dq:
+                if evq:
+                    eh = evq[0]
+                    dh = dq[0]
+                    if eh[0] < dh[0] or (eh[0] == dh[0] and eh[1] < dh[1]):
+                        ev = heappop(evq)
+                    else:
+                        ev = dq.popleft()
+                else:
+                    ev = dq.popleft()
+            elif evq:
+                ev = heappop(evq)
+            else:
+                break
+            t, _, kind, x, y, z = ev
+            now = t
+            makespan = t  # event times are nondecreasing
+            if kind == _DISPATCH:
+                p = x
+                rq = ready_q[p]
+                if not pu_idle[p] or not rq:
                     continue
-                _vt, f, _negbl, nid, _tr = heapq.heappop(ready_q[pid])
-                sn = view.stream_of[nid]
-                dt = exec_time(nid)
-                pu_idle[pid] = False
-                start = max(t, pu_free_at[pid])
+                _vt, f, _nb, _nid, j, slot = heappop(rq)
+                dt = exec_t[j]
+                pu_idle[p] = False
+                free_at = pu_free_at[p]
+                start = t if t > free_at else free_at
                 end = start + dt
-                pu_free_at[pid] = end
+                pu_free_at[p] = end
                 if dt > 0:
-                    busy_iv[pid].append((start, end))
-                    stream_busy[sn][pid] += dt
-                push(end, "done", (pid, sn, f, nid))
-            elif kind == "done":
-                pid, sn, f, nid = payload
-                pu_idle[pid] = True
-                finish(sn, f, nid, t)
-                if ready_q[pid]:
-                    push(t, "dispatch", (pid,))
-            elif kind == "complete":
-                sn, f = payload
-                if rates is None and injected[sn] < frames[sn]:
-                    inject(sn, injected[sn], t)
-        sojourns = {
-            sn: [complete_time[(sn, f)] - inject_time[(sn, f)]
-                 for f in range(frames[sn]) if (sn, f) in complete_time]
-            for sn in streams
+                    busy_iv[p].append((start, end))
+                    stream_busy[slot_stream[slot]][p] += dt
+                    if detect:
+                        busy_frame[p].append(f)
+                    heappush(evq, (end, seq, _DONE, p, slot, j))
+                elif end == t:
+                    dq.append((end, seq, _DONE, p, slot, j))
+                else:
+                    heappush(evq, (end, seq, _DONE, p, slot, j))
+                seq += 1
+            elif kind == _DONE:
+                p, slot, j = x, y, z
+                pu_idle[p] = True
+                s = slot_stream[slot]
+                f = slot_frame[slot]
+                if dyn:
+                    outs = [pr for pr in arrive_0[j] if is_active(pr[0], f)]
+                elif replicated:
+                    outs = arrive_tbl[f % period][j]
+                else:
+                    outs = arrive_0[j]
+                if not outs:
+                    slot_left[slot] -= 1
+                    if slot_left[slot] == 0:
+                        completions[s].append(t)
+                        complete_t[s][f] = t
+                        if detect:
+                            comp_frames.append(f)
+                        dq.append((t, seq, _COMPLETE, slot, 0, 0))
+                        seq += 1
+                else:
+                    for k, xf in outs:
+                        if xf:
+                            heappush(evq, (t + xf, seq, _ARRIVE, slot, k, 0))
+                        else:
+                            dq.append((t, seq, _ARRIVE, slot, k, 0))
+                        seq += 1
+                if ready_q[p]:
+                    dq.append((t, seq, _DISPATCH, p, 0, 0))
+                    seq += 1
+            elif kind == _ARRIVE:
+                slot, j = x, y
+                m = slot_missing[slot]
+                m[j] -= 1
+                if m[j] == 0:
+                    dq.append((t, seq, _READY, slot, j, 0))
+                    seq += 1
+            elif kind == _READY:
+                slot, j = x, y
+                s = slot_stream[slot]
+                f = slot_frame[slot]
+                p = pu_of[j]
+                heappush(ready_q[p],
+                         (f * w_arr[s], f, negbl[j], node_ids[j], j, slot))
+                if pu_idle[p]:
+                    free_at = pu_free_at[p]
+                    te = t if t > free_at else free_at
+                    if te == t:
+                        dq.append((te, seq, _DISPATCH, p, 0, 0))
+                    else:
+                        heappush(evq, (te, seq, _DISPATCH, p, 0, 0))
+                    seq += 1
+            elif kind == _COMPLETE:
+                slot = x
+                s = slot_stream[slot]
+                free_slots.append(slot)
+                if rates is None and injected[s] < fcount[s]:
+                    inject(s, injected[s], t)
+                if detect:
+                    done_n = len(completions[0])
+                    if done_n >= warmup and injected[0] < fcount[0]:
+                        key = fingerprint(t, done_n)
+                        prev = fp_map.get(key)
+                        if prev is None:
+                            if len(fp_map) < _DETECT_MAX_STATES:
+                                fp_map[key] = (
+                                    t, done_n,
+                                    tuple(len(busy_iv[p]) for p in range(npu)))
+                            else:
+                                # state space too large to recur within the
+                                # cap: stop paying for fingerprints and run
+                                # the rest of the simulation plainly
+                                detect = False
+                        else:
+                            t0, done0, blens = prev
+                            T = t - t0
+                            dF = done_n - done0
+                            if T > 0 and dF > 0:
+                                self._extrapolate(
+                                    fcount[0], dF, T, done0, done_n,
+                                    completions[0], comp_frames, complete_t[0],
+                                    inject_t[0], injected[0], busy_iv,
+                                    busy_frame, blens, stream_busy[0])
+                                self.last_early_exit = (
+                                    dF, T / TIME_SCALE if quant else T)
+                                makespan = max(completions[0])
+                                break
+            else:  # _INJECT (open loop)
+                inject(x, y, t)
+
+        sojourns_g = {
+            skeys[s]: [complete_t[s][f] - inject_t[s][f]
+                       for f in range(fcount[s]) if complete_t[s][f] is not None]
+            for s in range(S)
         }
-        return (makespan, {s: sorted(c) for s, c in completions.items()},
-                busy_iv, sojourns, stream_busy)
+        self.last_events = seq
+        if not quant:
+            return (makespan,
+                    {skeys[s]: sorted(completions[s]) for s in range(S)},
+                    {plan.pu_ids[p]: busy_iv[p] for p in range(npu)},
+                    sojourns_g,
+                    {skeys[s]: {plan.pu_ids[p]: stream_busy[s][p]
+                                for p in range(npu)} for s in range(S)})
+        # quantized grid -> seconds
+        sc = TIME_SCALE
+        return (
+            makespan / sc,
+            {skeys[s]: sorted(c / sc for c in completions[s]) for s in range(S)},
+            {plan.pu_ids[p]: [(b / sc, e / sc) for (b, e) in busy_iv[p]]
+             for p in range(npu)},
+            {k: [v / sc for v in vs] for k, vs in sojourns_g.items()},
+            {skeys[s]: {plan.pu_ids[p]: stream_busy[s][p] / sc
+                        for p in range(npu)} for s in range(S)},
+        )
+
+    @staticmethod
+    def _extrapolate(F: int, dF: int, T: float, done0: int, done_n: int,
+                     comps: List[float], comp_frames: List[int],
+                     complete_t: List[Optional[float]],
+                     inject_t: List[Optional[float]], injected: int,
+                     busy_iv: List[List[Tuple[float, float]]],
+                     busy_frame: List[List[int]], blens: Tuple[int, ...],
+                     sbusy: List[float]) -> None:
+        """Exact periodic extrapolation: the window between the two
+        matched states (``dF`` frames over ``T`` ticks) repeats verbatim,
+        shifted by multiples of ``(dF, T)``, until the frame budget ``F``
+        is met.  All arithmetic stays on the integer grid, so the result
+        equals a full simulation of the never-draining periodic regime."""
+        # completions (and per-frame completion times for sojourns)
+        for r in range(done0, done_n):
+            f = comp_frames[r] + dF
+            ct = comps[r] + T
+            while f < F:
+                complete_t[f] = ct
+                comps.append(ct)
+                f += dF
+                ct += T
+        # injections are frame-contiguous in the closed loop
+        for f in range(injected, F):
+            inject_t[f] = inject_t[f - dF] + T
+        # busy intervals, tagged by frame so the budget cut stays exact
+        for p, ivs in enumerate(busy_iv):
+            frames_p = busy_frame[p]
+            add = 0.0
+            for r in range(blens[p], len(ivs)):
+                b, e = ivs[r]
+                f = frames_p[r] + dF
+                d = e - b
+                bb = b + T
+                while f < F:
+                    ivs.append((bb, bb + d))
+                    add += d
+                    f += dF
+                    bb += T
+            sbusy[p] += add
+        if any(c is None for c in complete_t) or len(comps) != F:
+            raise RuntimeError(
+                "periodic extrapolation lost frames — this is a bug; "
+                "re-run with mode='exact'")
 
     @staticmethod
     def _steady_state(completions: List[float]) -> Tuple[float, Tuple[float, float]]:
@@ -439,7 +692,11 @@ class IMCESimulator:
         for pid, ivs in busy.items():
             acc = 0.0
             for a, b in ivs:
-                acc += max(0.0, min(b, w1) - max(a, w0))
+                if b <= w0 or a >= w1:
+                    continue
+                lo = a if a > w0 else w0
+                hi = b if b < w1 else w1
+                acc += hi - lo
             out[pid] = acc
         return out
 
@@ -463,34 +720,38 @@ class MultiTenantSimulator(IMCESimulator):
     and utilization share.
     """
 
+    _context_kind = "mt"
+
     def __init__(self, graph: MultiTenantGraph,
                  cost_model: Optional[CostModel] = None,
-                 max_in_flight: int = 0) -> None:
+                 max_in_flight: int = 0, mode: str = "exact") -> None:
         if not isinstance(graph, MultiTenantGraph):
             raise TypeError("MultiTenantSimulator needs a MultiTenantGraph")
-        super().__init__(graph, cost_model, max_in_flight)
+        super().__init__(graph, cost_model, max_in_flight, mode)
 
-    # -- stream view ----------------------------------------------------------
-    def _stream_view(self, a: Assignment) -> _StreamView:
-        """One stream per tenant, weighted for start-time fair queueing:
-        a tenant's frame f carries virtual time ``f * (its amortized busy
-        seconds per frame)``.  Ordering ready work by virtual time
-        equalizes *resource* shares instead of completion counts — a light
-        tenant streams several frames per heavy-tenant frame rather than
-        being locked to the heavy tenant's pace (which would cap aggregate
-        rate at n_tenants / heaviest-round)."""
+    # -- stream structure ------------------------------------------------------
+    def _stream_structure(self):
+        """One stream per tenant."""
         g: MultiTenantGraph = self.g  # type: ignore[assignment]
         tenants = list(g.tenants)
+        return (tenants,
+                {t: g.tenant_nodes(t) for t in tenants},
+                {t: g.tenant_sources(t) for t in tenants},
+                {t: g.tenant_sinks(t) for t in tenants},
+                {n: g.tenant_of(n) for n in g.topo_order()})
+
+    def _stream_weights(self, a: Assignment) -> Dict[str, float]:
+        """Start-time fair queueing weights: a tenant's frame f carries
+        virtual time ``f * (its amortized busy seconds per frame)``.
+        Ordering ready work by virtual time equalizes *resource* shares
+        instead of completion counts — a light tenant streams several
+        frames per heavy-tenant frame rather than being locked to the
+        heavy tenant's pace (which would cap aggregate rate at
+        n_tenants / heaviest-round)."""
+        g: MultiTenantGraph = self.g  # type: ignore[assignment]
         tl = a.tenant_load(g, self.cm)
-        return _StreamView(
-            streams=tenants,
-            nodes={t: g.tenant_nodes(t) for t in tenants},
-            sources={t: g.tenant_sources(t) for t in tenants},
-            sinks={t: g.tenant_sinks(t) for t in tenants},
-            stream_of={n: g.tenant_of(n) for n in g.topo_order()},
-            weight={t: max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
-                    for t in tenants},
-        )
+        return {t: max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
+                for t in g.tenants}
 
     # -- public API -----------------------------------------------------------
     def run(self, assignment: Assignment, frames: int = 64,
