@@ -74,11 +74,14 @@ def co_scheduled(mt: MultiTenantGraph, n_imc: int, n_dpu: int, alg: str,
 
 def main(frames: int = 96) -> dict:
     cm = CostModel()
+    # one graph object per resident model (a model registry): workloads
+    # that serve the same model share its compiled simulation context,
+    # cached schedules and memoized runs across cells
+    rn8_a, rn8_b, rn18 = resnet8_graph(), resnet8_graph(), resnet18_graph()
     workloads = [
-        ("2x resnet8", [resnet8_graph(), resnet8_graph()]),
-        ("resnet8+resnet18", [resnet8_graph(), resnet18_graph()]),
-        ("2x rn8 + rn18", [resnet8_graph(), resnet8_graph(),
-                           resnet18_graph()]),
+        ("2x resnet8", [rn8_a, rn8_b]),
+        ("resnet8+resnet18", [rn8_a, rn18]),
+        ("2x rn8 + rn18", [rn8_a, rn8_b, rn18]),
     ]
     fleets = [(4, 2), (8, 4), (12, 6)]
     out = {"fleets": [], "frames": frames}

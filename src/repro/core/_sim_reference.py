@@ -28,6 +28,8 @@ class _ReferenceLoopMixin:
     def _run_streams(
         self, a, frames, in_flight: int,
         rates: Optional[Dict[str, float]] = None,
+        light: bool = False,  # signature compat; the oracle always
+        # materializes everything (the loop below is the frozen original)
     ) -> Tuple[float, Dict[str, List[float]],
                Dict[int, List[Tuple[float, float]]],
                Dict[str, List[float]], Dict[str, Dict[int, float]]]:

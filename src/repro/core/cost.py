@@ -114,6 +114,16 @@ class CostModel:
         """Execution time of ``node`` on a PU of ``pu_type`` (default: the
         node's preferred type)."""
         pu_type = pu_type or node.pu_type
+        # Fast path: a per-node side table (attached to the node object,
+        # so it can never alias across nodes) keyed by the profile
+        # *object* plus the call args.  Node cost inputs are set at
+        # construction time, so the entry stays valid for the node's
+        # lifetime; a different profile simply misses into the slow path.
+        tc = node.__dict__.get("_time_cache")
+        if tc is not None and tc[0] is self.profile:
+            t = tc[1].get((pu_type, speed))
+            if t is not None:
+                return t
         # Memoize on the cost-relevant content, never on object identity:
         # an id()-based key aliases when a dead node's address is reused by
         # a new graph, handing back a stale time (a CostModel routinely
@@ -121,10 +131,14 @@ class CostModel:
         meta = node.meta
         key = (node.kind, pu_type, speed, node.flops, node.out_elems,
                meta.get("cin_kk"), meta.get("cout"), meta.get("n_vectors"))
-        if key in self._cache:
-            return self._cache[key]
-        t = self._time_uncached(node, pu_type) / max(speed, 1e-12)
-        self._cache[key] = t
+        t = self._cache.get(key)
+        if t is None:
+            t = self._time_uncached(node, pu_type) / max(speed, 1e-12)
+            self._cache[key] = t
+        if tc is None or tc[0] is not self.profile:
+            tc = (self.profile, {})
+            node.__dict__["_time_cache"] = tc
+        tc[1][(pu_type, speed)] = t
         return t
 
     def _time_uncached(self, node: Node, pu_type: PUType) -> float:

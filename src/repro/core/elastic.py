@@ -32,6 +32,15 @@ repeated events over the same serving graph — the common case: every
 nothing.  ``engine`` selects the measurement engine (``"exact"``
 default; benchmarks pass ``"periodic"`` for the quantized early-exit
 loop, see ``repro.core.simulator``).
+
+The incremental-probe layer compounds here: the scheduler's longest
+paths are cached on the serving graph (``Graph.scratch``), replica
+graphs produced by the absorb fast path seed their compiled context
+from the pre-failure graph's (``drop_replica`` preserves bottom levels
+and cost rows — see ``core.simcontext``), and ``run()`` results are
+content-memoized per context, so a fleet that oscillates between
+compositions (fail -> join -> fail of the same PU) re-measures known
+states for free.
 """
 
 from __future__ import annotations

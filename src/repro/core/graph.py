@@ -186,8 +186,22 @@ class Graph:
         self._topo_cache = None
         self._anc_cache = None
         # compiled simulation contexts (core.simcontext) are derived from
-        # the structure; any mutation makes them stale
+        # the structure; any mutation makes them stale.  The same goes for
+        # the scratch cache (scheduler memos) and the replica-variant seed
+        # link: both assume the structure they were derived from.
         self.__dict__.pop("_sim_contexts", None)
+        self.__dict__.pop("_scratch", None)
+        self.__dict__.pop("_ctx_seed", None)
+
+    def scratch(self) -> dict:
+        """Mutation-scoped scratch cache for derived deterministic figures
+        (scheduler longest paths, lblp-r probe sessions, ...).  Cleared by
+        ``_invalidate`` on any structural mutation; callers key entries by
+        content (cost-model profile, fleet signature), never identity."""
+        cache = self.__dict__.get("_scratch")
+        if cache is None:
+            cache = self.__dict__["_scratch"] = {}
+        return cache
 
     # -- queries ----------------------------------------------------------
     def successors(self, nid: int) -> List[int]:
@@ -318,19 +332,39 @@ class Graph:
         dicts, same ids and edges.  Subclasses extend via :meth:`_copy_into`."""
         g = type(self)(self.name)
         self._copy_into(g)
+        g._set_ctx_seed(self)
         return g
 
+    def _set_ctx_seed(self, parent: "Graph") -> None:
+        """Record the pristine ancestor this graph was derived from by a
+        replica-preserving transform (copy / replicate / drop_replica).
+
+        ``core.simcontext`` uses the link to seed a derived graph's
+        compiled context from the ancestor's (bottom levels and cost
+        tables are provably unchanged under those transforms).  The link
+        is dropped by ``_invalidate`` the moment the derived graph is
+        mutated further, because any other mutation voids that proof."""
+        self.__dict__["_ctx_seed"] = parent.__dict__.get("_ctx_seed", parent)
+
+    def ctx_seed(self) -> Optional["Graph"]:
+        return self.__dict__.get("_ctx_seed")
+
     def _copy_into(self, g: "Graph") -> None:
+        # direct dict construction: same nodes, same edge order as the
+        # historical add_node/add_edge sequence, without the per-call
+        # validation and invalidation (lblp-r derives dozens of variants)
+        nodes, succ, pred = g.nodes, g._succ, g._pred
         for nid in sorted(self.nodes):
             n = self.nodes[nid]
-            g.add_node(Node(
+            nodes[nid] = Node(
                 node_id=n.node_id, name=n.name, kind=n.kind, flops=n.flops,
                 weight_bytes=n.weight_bytes, out_bytes=n.out_bytes,
                 out_elems=n.out_elems, pu_type=n.pu_type,
                 fused_act=n.fused_act, meta=dict(n.meta),
-            ))
-        for s, d in self.edges():
-            g.add_edge(s, d)
+            )
+            succ[nid] = list(self._succ[nid])
+            pred[nid] = list(self._pred[nid])
+        g._invalidate()
 
     def replicate(self, node_id: int, k: int) -> "Graph":
         """Return a copy where ``node_id`` is cloned into ``k`` round-robin
@@ -343,6 +377,15 @@ class Graph:
         ``1/k`` of the per-frame compute, which is what
         ``CostModel.frame_time`` charges.
         """
+        g = self.copy()
+        g._replicate_in_place(node_id, k)
+        g._set_ctx_seed(self)
+        return g
+
+    def _replicate_in_place(self, node_id: int, k: int) -> None:
+        """The body of :meth:`replicate` minus the copy, so
+        :meth:`with_replicas` can apply several replications over one
+        copy instead of copying the whole graph per replicated node."""
         if k < 1:
             raise GraphError(f"replica count must be >= 1, got {k}")
         node = self.nodes[node_id]  # unknown id -> KeyError
@@ -352,17 +395,15 @@ class Graph:
             raise GraphError(
                 f"node {node_id} is already replicated; apply counts to the "
                 "base graph instead (Graph.with_replicas)")
-        g = self.copy()
         if k == 1:
-            return g
-        base = g.nodes[node_id]
-        base.meta.update(replica_group=node_id, replica_index=0,
+            return
+        node.meta.update(replica_group=node_id, replica_index=0,
                          replica_count=k)
-        preds = g.predecessors(node_id)
-        succs = g.successors(node_id)
+        preds = self.predecessors(node_id)
+        succs = self.successors(node_id)
         for i in range(1, k):
-            rid = max(g.nodes) + 1
-            g.add_node(Node(
+            rid = max(self.nodes) + 1
+            self.add_node(Node(
                 node_id=rid, name=f"{node.name}@r{i}", kind=node.kind,
                 flops=node.flops, weight_bytes=node.weight_bytes,
                 out_bytes=node.out_bytes, out_elems=node.out_elems,
@@ -371,11 +412,10 @@ class Graph:
                       "replica_index": i, "replica_count": k},
             ))
             for p in preds:
-                g.add_edge(p, rid)
+                self.add_edge(p, rid)
             for s in succs:
-                g.add_edge(rid, s)
-            g._on_replica_added(node_id, rid)
-        return g
+                self.add_edge(rid, s)
+            self._on_replica_added(node_id, rid)
 
     def _on_replica_added(self, base_id: int, replica_id: int) -> None:
         """Bookkeeping hook for subclasses (tenant registries etc.)."""
@@ -384,11 +424,12 @@ class Graph:
         """Apply several replications at once: ``counts`` maps base node id
         to total replica count (entries of 1 are no-ops).  Always returns a
         copy, so callers can derive variants from one pristine graph."""
-        g: "Graph" = self
+        g = self.copy()
         for nid in sorted(counts):
             if counts[nid] > 1:
-                g = g.replicate(nid, counts[nid])
-        return g.copy() if g is self else g
+                g._replicate_in_place(nid, counts[nid])
+        g._set_ctx_seed(self)
+        return g
 
     def replica_groups(self) -> Dict[int, List[int]]:
         """Base node id -> sorted member ids, replicated groups only."""
@@ -422,6 +463,7 @@ class Graph:
             else:
                 meta["replica_index"] = i
                 meta["replica_count"] = len(members)
+        g._set_ctx_seed(self)
         return g
 
     def _remove_node(self, nid: int) -> None:

@@ -156,29 +156,44 @@ class Scheduler:
     def _assign_min_load(self, node: Node, candidates: Sequence[PUSpec],
                          mapping: Dict[int, int], load: Dict[int, float],
                          weights: Dict[int, float], spills: List[int],
-                         conflicts=None) -> None:
+                         conflicts=None,
+                         on_pu: Optional[Dict[int, List[int]]] = None) -> None:
         """Min-load greedy placement with the LBLP capacity-waiver contract:
         a node no PU can hold is still assigned (the emulator spills its
         weights to DRAM) and recorded in ``spills``.  ``conflicts(a, b)``
         optionally marks node pairs to keep on different PUs when possible
-        (the parallel-branch constraint; callers scope the predicate)."""
+        (the parallel-branch constraint; callers scope the predicate).
+        ``on_pu`` (pu_id -> assigned node ids, maintained here) makes the
+        conflict scan per candidate PU proportional to that PU's own
+        nodes instead of the whole mapping; callers that pass it must
+        start from a dict consistent with ``mapping``."""
         pool = [p for p in candidates if self._fits(node, p, weights)]
         if not pool:
             pool = list(candidates)  # capacity waiver (spill)
             spills.append(node.node_id)
         if conflicts is not None:
-            free = [
-                p for p in pool
-                if not any(
-                    conflicts(node.node_id, other)
-                    for other, pid in mapping.items()
-                    if pid == p.pu_id
-                )
-            ]
+            nid = node.node_id
+            if on_pu is not None:
+                free = [
+                    p for p in pool
+                    if not any(conflicts(nid, other)
+                               for other in on_pu.get(p.pu_id, ()))
+                ]
+            else:
+                free = [
+                    p for p in pool
+                    if not any(
+                        conflicts(nid, other)
+                        for other, pid in mapping.items()
+                        if pid == p.pu_id
+                    )
+                ]
             if free:
                 pool = free
         best = min(pool, key=lambda p: (load[p.pu_id], p.pu_id))
         mapping[node.node_id] = best.pu_id
+        if on_pu is not None:
+            on_pu.setdefault(best.pu_id, []).append(node.node_id)
         # replicas are amortized (frame_time == time on unreplicated graphs)
         load[best.pu_id] += self.cm.frame_time(node, best.pu_type, best.speed)
         weights[best.pu_id] += node.weight_bytes

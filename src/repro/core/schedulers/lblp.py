@@ -44,15 +44,22 @@ class LBLPScheduler(Scheduler):
         spills: List[int] = []
 
         # Step 1: longest path by execution time (on native PU type).
-        lp = g.longest_path(lambda n: cm.time(n))
+        # Fleet-independent, so cached on the graph (cleared on mutation)
+        # — elastic sessions and lblp-r probes re-schedule one graph many
+        # times over changing fleets.
+        lp_key = ("lblp-lp", type(cm), cm.profile)
+        lp = g.scratch().get(lp_key)
+        if lp is None:
+            lp = g.scratch()[lp_key] = g.longest_path(lambda n: cm.time(n))
         lp_set = set(lp)
 
         # prefer PUs holding no node parallel to this one
         conflicts = g.is_parallel if self.branch_constraint else None
+        on_pu: Dict[int, List[int]] = {p.pu_id: [] for p in pus}
 
         def assign(node: Node, candidates: List[PUSpec]) -> None:
             self._assign_min_load(node, candidates, mapping, load, weights,
-                                  spills, conflicts)
+                                  spills, conflicts, on_pu)
 
         # Steps 2-3: LP nodes, per type, descending execution time.
         lp_nodes = [g.nodes[n] for n in lp if not g.nodes[n].is_free()]

@@ -53,10 +53,18 @@ class LBLPMTScheduler(Scheduler):
         spills: List[int] = []
 
         # Step 1: per-tenant longest paths, heaviest tenant first.
-        lp_of = {t: g.tenant_longest_path(t, lambda n: cm.time(n))
-                 for t in g.tenants}
-        lp_time = {t: sum(cm.time(g.nodes[n]) for n in lp_of[t])
-                   for t in g.tenants}
+        # Fleet-independent, so cached on the graph (cleared on mutation)
+        # — lblp-r probes and elastic events re-schedule one union often.
+        lp_key = ("lblp-mt-lp", type(cm), cm.profile)
+        hit = g.scratch().get(lp_key)
+        if hit is None:
+            lp_of = {t: g.tenant_longest_path(t, lambda n: cm.time(n))
+                     for t in g.tenants}
+            lp_time = {t: sum(cm.time(g.nodes[n]) for n in lp_of[t])
+                       for t in g.tenants}
+            g.scratch()[lp_key] = (lp_of, lp_time)
+        else:
+            lp_of, lp_time = hit
         tenant_order = sorted(g.tenants, key=lambda t: (-lp_time[t], t))
         lp_set = {n for lp in lp_of.values() for n in lp}
 
@@ -67,10 +75,11 @@ class LBLPMTScheduler(Scheduler):
                     and g.is_parallel(a, b))
 
         conflicts = same_tenant_parallel if self.branch_constraint else None
+        on_pu: Dict[int, List[int]] = {p.pu_id: [] for p in pus}
 
         def assign(node: Node, candidates: List[PUSpec]) -> None:
             self._assign_min_load(node, candidates, mapping, load, weights,
-                                  spills, conflicts)
+                                  spills, conflicts, on_pu)
 
         # Step 2: interleaved LP assignment, per PU type.
         for pu_type in (PUType.IMC, PUType.DPU):

@@ -42,6 +42,20 @@ The returned assignment maps node ids of the *replicated* graph:
 ``meta["replicated_graph"]`` carries that graph, ``meta["replicas"]``
 the base-node replica counts.  ``schedule_replicated`` is the
 convenience wrapper returning ``(replicated_graph, assignment)``.
+
+Incremental probes
+------------------
+One scheduling pass evaluates dozens of replica variants, and a budget
+sweep (the replication benchmark) re-evaluates every budget's prefix
+from scratch.  All candidate evaluation therefore runs through a
+*probe session* cached on the base graph (``Graph.scratch``), keyed by
+(cost model, fleet, inner scheduler): each distinct replica-count
+signature is derived, scheduled and load-vectored exactly once, and —
+because the session hands back one shared graph object per signature —
+the derived graph's compiled ``SimContext`` (seeded from the base
+graph's, see ``core.simcontext``) and its content-keyed
+``measured_rate`` memo survive across ``validate_rate`` probes, budget
+sweeps and benchmark rows alike.
 """
 
 from __future__ import annotations
@@ -54,6 +68,53 @@ from ..graph import Graph, MultiTenantGraph, PUType
 from .base import Assignment, ScheduleError, Scheduler
 from .lblp import LBLPScheduler
 from .lblp_mt import LBLPMTScheduler
+
+from ..simcontext import MEMO_CAP as _MEMO_CAP  # shared ctx.memo bound
+
+
+class _ProbeSession:
+    """Replica-variant probe cache for one (base graph, cm, fleet,
+    inner scheduler) combination; see module docstring."""
+
+    def __init__(self, g: Graph, cm: CostModel, pus: Sequence[PUSpec],
+                 inner: Scheduler) -> None:
+        self.g = g
+        self.cm = cm
+        self.pus = list(pus)
+        self.inner = inner
+        self._variants: Dict[tuple, dict] = {}
+
+    @staticmethod
+    def signature(counts: Dict[int, int]) -> tuple:
+        return tuple(sorted((k, v) for k, v in counts.items() if v > 1))
+
+    def probe(self, counts: Dict[int, int]) -> dict:
+        """Derived graph + inner schedule + load figures for ``counts``,
+        computed once per signature and shared thereafter."""
+        key = self.signature(counts)
+        e = self._variants.get(key)
+        if e is None:
+            g_v = self.g.with_replicas(dict(counts)) if key else self.g
+            a = self.inner.schedule(g_v, self.pus)
+            load = a.load(g_v, self.cm)
+            # sorted descending: lexicographic "smaller" == better balance
+            vec = tuple(sorted(load.values(), reverse=True))
+            e = self._variants[key] = {
+                "graph": g_v, "assignment": a, "load": load, "vec": vec,
+            }
+        return e
+
+    @staticmethod
+    def for_graph(g: Graph, cm: CostModel, pus: Sequence[PUSpec],
+                  inner: Scheduler) -> "_ProbeSession":
+        key = ("lblp-r-probe", type(cm), cm.profile, inner.name,
+               getattr(inner, "branch_constraint", None),
+               tuple((p.pu_id, p.pu_type, p.speed, p.weight_capacity)
+                     for p in pus))
+        sess = g.scratch().get(key)
+        if sess is None:
+            sess = g.scratch()[key] = _ProbeSession(g, cm, pus, inner)
+        return sess
 
 
 class LBLPRScheduler(Scheduler):
@@ -101,21 +162,19 @@ class LBLPRScheduler(Scheduler):
         n_by_type = {pt: sum(1 for p in pus if p.pu_type is pt)
                      for pt in PUType}
 
+        sess = _ProbeSession.for_graph(g, cm, pus, inner)
         counts: Dict[int, int] = {}
-        base_a = inner.schedule(g, pus)
-        base_bound = self._bound(base_a, g, cm)
+        base_e = sess.probe(counts)
+        base_a = base_e["assignment"]
+        base_bound = max(base_e["load"].values()) if base_e["load"] else 0.0
         best_g: Graph = g
         best_a = base_a
-
-        def load_vector(a: Assignment, gr: Graph) -> Tuple[float, ...]:
-            # sorted descending: lexicographic "smaller" == better balance
-            return tuple(sorted(a.load(gr, cm).values(), reverse=True))
-
-        best_vec = load_vector(base_a, g)
+        best_vec = base_e["vec"]
+        best_load = base_e["load"]
 
         extra = 0
         while extra < budget:
-            load = best_a.load(best_g, cm)
+            load = best_load
             bottleneck_pu = max(load, key=lambda p: (load[p], -p))
             cands = [best_g.nodes[nid]
                      for nid, pid in best_a.mapping.items()
@@ -130,12 +189,11 @@ class LBLPRScheduler(Scheduler):
                 if k_new > max(n_by_type.get(g.nodes[base].pu_type, 0), 1):
                     continue
                 try_counts = {**counts, base: k_new}
-                g_try = g.with_replicas(try_counts)
-                a_try = inner.schedule(g_try, pus)
-                vec_try = load_vector(a_try, g_try)
-                if vec_try < best_vec:
-                    counts, best_g, best_a = try_counts, g_try, a_try
-                    best_vec = vec_try
+                e = sess.probe(try_counts)
+                if e["vec"] < best_vec:
+                    counts = try_counts
+                    best_g, best_a = e["graph"], e["assignment"]
+                    best_vec, best_load = e["vec"], e["load"]
                     improved = True
                     break
             if not improved:
@@ -206,23 +264,30 @@ def measured_rate(g: Graph, a: Assignment, cm: Optional[CostModel],
                tuple((p.pu_id, p.pu_type, p.speed) for p in a.pus))
         hit = memo.get(key)
         if hit is not None:
+            # LRU touch: re-insert so the entry survives eviction while
+            # a scheduling pass keeps probing it
+            del memo[key]
+            memo[key] = hit
             return hit
     if isinstance(g, MultiTenantGraph) and len(g.tenants) > 1:
         _, completions, _, _, _ = sim._run_streams(
             a, {t: frames for t in g.tenants},
-            in_flight=len(a.pus) + 2)
+            in_flight=len(a.pus) + 2, light=True)
         total = 0.0
         for comps in completions.values():
             interval, _ = sim._steady_state(comps)
             total += 1.0 / interval if interval > 0 else math.inf
     else:
-        _, completions, _, _ = sim._simulate(a, frames=frames,
-                                             in_flight=len(a.pus) + 2)
-        interval, _ = sim._steady_state(completions)
+        _, completions, _, _, _ = sim._run_streams(
+            a, frames=frames, in_flight=len(a.pus) + 2, light=True)
+        interval, _ = sim._steady_state(completions[next(iter(completions))])
         total = 1.0 / interval if interval > 0 else math.inf
     if key is not None:
-        if len(memo) >= 256:
-            memo.clear()
+        while len(memo) >= _MEMO_CAP:
+            # bounded LRU: evict the stalest entry, never the whole
+            # cache (a mid-search wipe used to throw away every probe
+            # of the current scheduling pass)
+            memo.pop(next(iter(memo)))
         memo[key] = total
     return total
 
