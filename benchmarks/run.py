@@ -29,6 +29,7 @@ SUITES = {
     "elastic": "elastic_bench",
     "multi_tenant": "multi_tenant",
     "replication": "replication",
+    "serving": "serving",
     "sensitivity": "sensitivity",
     "partition": "lm_partition",
     "sim_speed": "sim_speed",

@@ -50,6 +50,18 @@ def make_simulator(graph, cost_model=None, engine: str = "exact",
     return cls(graph, cost_model, max_in_flight, mode=engine)
 
 
+# imported after make_simulator exists: serving builds on the factory
+from .serving import (  # noqa: E402  (deliberate late import)
+    SLO,
+    Decision,
+    ServingControlPlane,
+    SLOReport,
+    TraceEvent,
+    aggregate_goodput,
+    dump_trace,
+    load_trace,
+)
+
 __all__ = [
     "CostModel",
     "HardwareProfile",
@@ -79,4 +91,12 @@ __all__ = [
     "SimContext",
     "TIME_SCALE",
     "make_simulator",
+    "SLO",
+    "Decision",
+    "ServingControlPlane",
+    "SLOReport",
+    "TraceEvent",
+    "aggregate_goodput",
+    "dump_trace",
+    "load_trace",
 ]

@@ -21,6 +21,19 @@ records which path ran.
 reports the degradation curve (rate/latency after each failure) — see
 benchmarks/elastic_bench.py and examples/elastic_reschedule.py.
 
+Serving verbs (tenant churn)
+----------------------------
+On a :class:`~repro.core.graph.MultiTenantGraph`-backed session the
+tenant set is no longer fixed at construction: ``add_tenant`` /
+``remove_tenant`` mutate the union in place and re-co-schedule,
+``reweight`` changes a tenant's serving priority (policy, not
+structure: compiled contexts survive, the run memos key weights by
+content), and ``set_replicas`` serves the union at explicit replica
+widths through the ``lblp-r`` probe session.  Churn drops exactly the
+session caches derived from the union (``_tenant_churn``) — the
+serving control plane (``repro.core.serving``) drives all of this
+from a trace.
+
 Simulation engine reuse
 -----------------------
 Every elastic event re-measures the fleet in the discrete-event
@@ -66,9 +79,18 @@ class ElasticEvent:
     #: MultiTenantGraph — one PU failure re-co-schedules *all* tenants.
     tenant_rates: Optional[Dict[str, float]] = None
     tenant_latencies: Optional[Dict[str, float]] = None
-    #: how the fleet recovered: "schedule" (full re-run of the scheduler)
-    #: or "replica-absorb" (surviving replicas soaked up the failed PU)
+    #: what triggered the re-placement: "schedule" (PU fail/join re-run
+    #: of the scheduler), "replica-absorb" (surviving replicas soaked up
+    #: the failed PU), or the serving-tier verbs "tenant-add" /
+    #: "tenant-remove" / "reweight" / "replicate" / "reclaim"
     recovery: str = "schedule"
+    #: tenant the event concerned, for churn/reweight events
+    tenant: Optional[str] = None
+    #: the full simulator result behind rate/latency — retained on the
+    #: *most recent* event only (older entries are thinned to the
+    #: scalar fields above, or the append-only history would pin every
+    #: busy-interval list ever measured); None over an empty union
+    result: Optional[SimResult] = None
 
 
 class ElasticSession:
@@ -77,12 +99,14 @@ class ElasticSession:
     def __init__(self, graph: Graph, pus: Sequence[PUSpec],
                  algorithm: Optional[str] = None,
                  cost_model: Optional[CostModel] = None,
-                 engine: str = "exact") -> None:
+                 engine: str = "exact", frames: int = 64) -> None:
         self.g = graph
         self.cm = cost_model or CostModel()
         self._multi = isinstance(graph, MultiTenantGraph)
         self.algorithm = algorithm or ("lblp-mt" if self._multi else "lblp")
         self.engine = engine
+        #: frame budget of the per-event measurement runs
+        self.frames = frames
         self.live: List[PUSpec] = list(pus)
         self.history: List[ElasticEvent] = []
         # one simulator per serving graph; its compiled SimContext is
@@ -91,14 +115,31 @@ class ElasticSession:
         self._schedule(None)
 
     # -- internals -------------------------------------------------------
-    def _schedule(self, failed: Optional[int]) -> None:
+    def _schedule(self, failed: Optional[int], recovery: str = "schedule",
+                  tenant: Optional[str] = None) -> None:
         if not self.live:
             raise RuntimeError("no surviving PUs")
+        if not self.g.nodes:
+            # an all-departed union: the fleet idles, nothing to place
+            # or simulate (a session may be born empty and grow by
+            # add_tenant, or churn down to zero tenants)
+            self.serving_graph = self.g
+            self.assignment = Assignment(
+                mapping={}, pus=list(self.live), algorithm=self.algorithm)
+            if self.history:
+                self.history[-1].result = None   # see ElasticEvent.result
+            self.history.append(ElasticEvent(
+                failed_pu=failed, n_pus=len(self.live), rate=0.0,
+                latency=0.0, mapping={},
+                tenant_rates={} if self._multi else None,
+                tenant_latencies={} if self._multi else None,
+                recovery=recovery, tenant=tenant))
+            return
         sched = get_scheduler(self.algorithm, self.cm)
         a: Assignment = sched.schedule(self.g, self.live)
         # graph-transforming schedulers (lblp-r) serve a derived graph
         serving = a.meta.get("replicated_graph", self.g)
-        self._record(failed, serving, a, recovery="schedule")
+        self._record(failed, serving, a, recovery=recovery, tenant=tenant)
 
     def _sim_for(self, serving: Graph):
         hit = self._sims.get(id(serving))
@@ -111,10 +152,13 @@ class ElasticSession:
         return sim
 
     def _record(self, failed: Optional[int], serving: Graph,
-                a: Assignment, recovery: str) -> None:
+                a: Assignment, recovery: str,
+                tenant: Optional[str] = None) -> None:
         self.serving_graph: Graph = serving
         self.assignment = a
-        res: SimResult = self._sim_for(serving).run(a, frames=64)
+        res: SimResult = self._sim_for(serving).run(a, frames=self.frames)
+        if self.history:
+            self.history[-1].result = None   # see ElasticEvent.result
         self.history.append(ElasticEvent(
             failed_pu=failed,
             n_pus=len(self.live),
@@ -126,6 +170,8 @@ class ElasticSession:
             tenant_latencies=({t: m.latency for t, m in res.tenants.items()}
                               if res.tenants else None),
             recovery=recovery,
+            tenant=tenant,
+            result=res,
         ))
 
     def _absorb(self, pu_id: int) -> bool:
@@ -178,11 +224,158 @@ class ElasticSession:
             self._schedule(failed=pu_id)
         return self.history[-1]
 
-    def join(self, pu: PUSpec) -> ElasticEvent:
-        """A PU (re)joined the fleet: scale back up."""
+    def join(self, pu: PUSpec,
+             replicas: Optional[Dict[int, int]] = None) -> ElasticEvent:
+        """A PU (re)joined the fleet: scale back up.  ``replicas``
+        optionally re-applies replica widths in the same pass."""
+        if any(p.pu_id == pu.pu_id for p in self.live):
+            # all load/mapping accounting keys by pu_id; a duplicate
+            # would silently double-book one physical unit
+            raise KeyError(f"PU {pu.pu_id} is already in the live set")
         self.live.append(pu)
-        self._schedule(failed=None)
+        if replicas and self.g.nodes:
+            self._reschedule(replicas, recovery="schedule", tenant=None)
+        else:
+            self._schedule(failed=None)
         return self.history[-1]
+
+    # -- tenant churn (serving tier) --------------------------------------
+    def _union(self) -> MultiTenantGraph:
+        if not self._multi:
+            raise TypeError(
+                "tenant churn needs a MultiTenantGraph-backed session")
+        return self.g  # type: ignore[return-value]
+
+    def _tenant_churn(self) -> None:
+        """The union graph just mutated (tenant added/removed): drop
+        exactly the session caches derived from it — the simulator held
+        for the union itself and the ones for replica variants seeded
+        from it.  Holding onto them is the stale-cache bug this guards
+        against: ``_sim_for`` keys by graph *identity*, so after an
+        in-place mutation it would keep handing back a simulator whose
+        compiled context (and ``measured_rate``/``run`` memos) describe
+        the pre-churn tenant set.  Graph-level caches (contexts,
+        scratch, probe sessions) were already invalidated by
+        ``Graph._invalidate`` inside the mutation."""
+        self._sims = {
+            k: v for k, v in self._sims.items()
+            if v[0] is not self.g and v[0].ctx_seed() is not self.g
+        }
+
+    def add_tenant(self, graph: Graph, tenant: Optional[str] = None,
+                   weight: float = 1.0,
+                   replicas: Optional[Dict[int, int]] = None) -> ElasticEvent:
+        """A tenant arrived: ingest its model graph into the served
+        union (under serving weight ``weight``) and re-co-schedule.
+        ``replicas`` optionally carries the replica widths to serve the
+        new union at, so the replicated state is scheduled and measured
+        directly instead of via a bare-union intermediate."""
+        mt = self._union()
+        t = mt.add_tenant(graph, tenant)
+        if weight != 1.0:
+            mt.set_tenant_weight(t, weight)
+        self._tenant_churn()
+        self._reschedule(replicas, recovery="tenant-add", tenant=t)
+        return self.history[-1]
+
+    def remove_tenant(self, tenant: str,
+                      replicas: Optional[Dict[int, int]] = None
+                      ) -> ElasticEvent:
+        """A tenant departed: drop its component (and any replicas of
+        its nodes) from the union and re-co-schedule the rest.
+        ``replicas`` entries for departed nodes are filtered here."""
+        mt = self._union()
+        mt.remove_tenant(tenant)
+        self._tenant_churn()
+        self._reschedule(replicas, recovery="tenant-remove", tenant=tenant)
+        return self.history[-1]
+
+    def reweight(self, tenant: str, weight: float,
+                 replicas: Optional[Dict[int, int]] = None) -> ElasticEvent:
+        """Change a tenant's serving weight and re-co-schedule.  Weights
+        are policy, not structure: compiled contexts and cached
+        simulators stay valid (schedule and run memos key the weights
+        by content), so this is the cheapest of the churn events."""
+        mt = self._union()
+        mt.set_tenant_weight(tenant, weight)
+        self._reschedule(replicas, recovery="reweight", tenant=tenant)
+        return self.history[-1]
+
+    def adopt_union(self, union: MultiTenantGraph,
+                    recovery: str = "tenant-add",
+                    tenant: Optional[str] = None,
+                    replicas: Optional[Dict[int, int]] = None
+                    ) -> ElasticEvent:
+        """Swap in an externally prepared union — e.g. an admission
+        probe's candidate, content-identical to the served union plus
+        the newcomer — as the served graph.  Unlike :meth:`add_tenant`
+        this keeps the prepared graph's caches (compiled contexts,
+        probe sessions, content-keyed run memos), so committing an
+        already-probed state re-measures nothing."""
+        if not isinstance(union, MultiTenantGraph):
+            raise TypeError("adopt_union needs a MultiTenantGraph")
+        self.g = union
+        self._multi = True
+        # every cached simulator belongs to the previous union's lineage
+        self._sims.clear()
+        self._reschedule(replicas, recovery=recovery, tenant=tenant)
+        return self.history[-1]
+
+    def _reschedule(self, replicas: Optional[Dict[int, int]],
+                    recovery: str, tenant: Optional[str]) -> None:
+        """Churn-verb scheduling: replicated when widths were handed in
+        (and any survive the mutation), plain otherwise."""
+        if replicas:
+            replicas = {b: k for b, k in replicas.items()
+                        if k > 1 and b in self.g.nodes}
+        if replicas:
+            self._schedule_replicated(replicas, recovery, tenant)
+        else:
+            self._schedule(None, recovery=recovery, tenant=tenant)
+
+    # -- replica control (serving tier) -----------------------------------
+    def set_replicas(self, counts: Dict[int, int],
+                     recovery: str = "replicate") -> ElasticEvent:
+        """Serve the union with the given replica widths (base node id
+        -> total count; entries of 1 are no-ops, ``{}`` reclaims every
+        replica).  Runs through the ``lblp-r`` probe session cached on
+        the union, so repeated visits to one replica signature — the
+        serving control loop's common case — share a single derived
+        graph, inner schedule, seeded simulation context and run memo."""
+        self._schedule_replicated(
+            {b: k for b, k in counts.items() if k > 1}, recovery, None)
+        return self.history[-1]
+
+    def _schedule_replicated(self, counts: Dict[int, int], recovery: str,
+                             tenant: Optional[str]) -> None:
+        if self.algorithm == "lblp-r":
+            raise ValueError(
+                "set_replicas drives replication explicitly; use an inner "
+                "algorithm (lblp/lblp-mt) for the session, not lblp-r")
+        from .schedulers.lblp_r import ProbeSession
+        sched = get_scheduler(self.algorithm, self.cm)
+        sess = ProbeSession.for_graph(self.g, self.cm, self.live, sched)
+        e = sess.probe(counts)
+        serving, inner_a = e["graph"], e["assignment"]
+        # fresh Assignment: probe entries are shared cache objects
+        a = Assignment(
+            mapping=dict(inner_a.mapping),
+            pus=list(self.live),
+            algorithm=inner_a.algorithm,
+            meta={**inner_a.meta,
+                  "replicas": dict(counts),
+                  "replicated_graph": serving,
+                  "extra_replicas": sum(k - 1 for k in counts.values()),
+                  "bound_interval": (max(e["load"].values())
+                                     if e["load"] else 0.0)},
+        )
+        self._record(None, serving, a, recovery=recovery, tenant=tenant)
+
+    def replica_counts(self) -> Dict[int, int]:
+        """Replica widths of the currently served graph (base node id ->
+        count), as maintained by set_replicas / lblp-r / absorb events."""
+        return {b: len(ms)
+                for b, ms in self.serving_graph.replica_groups().items()}
 
     def degradation_curve(self) -> List[Tuple[int, float, float]]:
         return [(e.n_pus, e.rate, e.latency) for e in self.history]

@@ -551,11 +551,21 @@ class MultiTenantGraph(Graph):
     Node ids of ingested graphs are remapped onto disjoint ranges
     (``_id_map`` keeps tenant-local id -> union id); the constituent
     graphs are never mutated.
+
+    Tenants additionally carry a *weight* (priority, default 1.0): the
+    simulator's fair-queueing virtual time divides each tenant's
+    per-frame resource charge by its weight, so a weight-2 tenant is
+    entitled to twice the fleet share of a weight-1 tenant, and
+    ``lblp-mt`` places higher-weight tenants' critical paths first.
+    Weights are serving policy, not structure: changing one never
+    invalidates compiled simulation contexts or scheduler caches (the
+    consumers key their memos by weight content instead).
     """
 
     def __init__(self, name: str = "multi-tenant") -> None:
         super().__init__(name)
         self.tenants: List[str] = []
+        self.tenant_weights: Dict[str, float] = {}
         self._tenant_nodes: Dict[str, List[int]] = {}
         self._id_map: Dict[str, Dict[int, int]] = {}
 
@@ -616,10 +626,44 @@ class MultiTenantGraph(Graph):
         self._id_map[tenant] = remap
         return tenant
 
+    def remove_tenant(self, tenant: str) -> None:
+        """Remove one tenant's component (including any replicas of its
+        nodes) from the union in place.  Structural mutation: compiled
+        simulation contexts and scratch caches are invalidated exactly
+        like any other graph edit."""
+        if tenant not in self._tenant_nodes:
+            raise GraphError(f"unknown tenant '{tenant}'")
+        for nid in list(self._tenant_nodes[tenant]):
+            self._remove_node(nid)
+        self.tenants.remove(tenant)
+        del self._tenant_nodes[tenant]
+        del self._id_map[tenant]
+        self.tenant_weights.pop(tenant, None)
+
+    # -- tenant weights (serving priority) ---------------------------------
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Set a tenant's serving weight (relative fleet-share priority).
+
+        Intentionally does *not* invalidate compiled contexts: weights
+        are not graph structure.  Consumers (the simulator's run memo,
+        ``measured_rate``) key their caches by weight content."""
+        if tenant not in self._tenant_nodes:
+            raise GraphError(f"unknown tenant '{tenant}'")
+        if not weight > 0:
+            raise GraphError(f"tenant weight must be > 0, got {weight}")
+        if weight == 1.0:
+            self.tenant_weights.pop(tenant, None)
+        else:
+            self.tenant_weights[tenant] = float(weight)
+
+    def tenant_weight(self, tenant: str) -> float:
+        return self.tenant_weights.get(tenant, 1.0)
+
     # -- replication bookkeeping -------------------------------------------
     def copy(self) -> "MultiTenantGraph":
         mt: MultiTenantGraph = super().copy()  # type: ignore[assignment]
         mt.tenants = list(self.tenants)
+        mt.tenant_weights = dict(self.tenant_weights)
         mt._tenant_nodes = {t: list(ns) for t, ns in self._tenant_nodes.items()}
         mt._id_map = {t: dict(m) for t, m in self._id_map.items()}
         return mt
@@ -676,6 +720,8 @@ class MultiTenantGraph(Graph):
         raw = json.loads(super().to_json())
         raw["tenants"] = list(self.tenants)
         raw["id_map"] = self._id_map
+        if self.tenant_weights:
+            raw["tenant_weights"] = dict(self.tenant_weights)
         return json.dumps(raw, indent=2)
 
     @classmethod
@@ -700,6 +746,7 @@ class MultiTenantGraph(Graph):
         for s, d in raw["edges"]:
             mt.add_edge(s, d)
         mt.tenants = list(raw["tenants"])
+        mt.tenant_weights = dict(raw.get("tenant_weights", {}))
         mt._id_map = {t: {int(k): v for k, v in m.items()}
                       for t, m in raw["id_map"].items()}
         # rebuild from the node tags, not _id_map: replicas added after

@@ -22,11 +22,23 @@ LBLP-MT generalizes steps 1-3 to the union:
      separation rule would otherwise degenerate into noise.
 
 On a single-model graph LBLP-MT reduces exactly to LBLP.
+
+Tenant weights (serving priority)
+---------------------------------
+Per-tenant weights — from ``MultiTenantGraph.tenant_weight`` or the
+``tenant_weights`` constructor override — scale each tenant's claim in
+the interleave: tenants are ordered by *weighted* longest-path time, so
+a weight-2 tenant's critical path picks least-loaded PUs before an
+equally heavy weight-1 tenant's.  The same weights drive the
+simulator's weighted fair queueing (a weight-w tenant receives w times
+the fleet share), so scheduler and runtime agree on who the priority
+tenants are.  All weights defaulting to 1.0 reproduces the historical
+unweighted behaviour exactly.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from ..cost import PUSpec
 from ..graph import Graph, MultiTenantGraph, Node, PUType
@@ -37,9 +49,17 @@ from .lblp import LBLPScheduler
 class LBLPMTScheduler(Scheduler):
     name = "lblp-mt"
 
-    def __init__(self, cost_model=None, branch_constraint: bool = True) -> None:
+    def __init__(self, cost_model=None, branch_constraint: bool = True,
+                 tenant_weights: Optional[Dict[str, float]] = None) -> None:
         super().__init__(cost_model)
         self.branch_constraint = branch_constraint
+        #: optional per-tenant weight override; tenants absent here fall
+        #: back to the graph's own ``tenant_weight`` (default 1.0)
+        self.tenant_weights = dict(tenant_weights or {})
+
+    def _tenant_weight(self, g: MultiTenantGraph, tenant: str) -> float:
+        w = self.tenant_weights.get(tenant)
+        return w if w is not None else g.tenant_weight(tenant)
 
     def schedule(self, g: Graph, pus: Sequence[PUSpec]) -> Assignment:
         if not isinstance(g, MultiTenantGraph) or len(g.tenants) <= 1:
@@ -65,7 +85,12 @@ class LBLPMTScheduler(Scheduler):
             g.scratch()[lp_key] = (lp_of, lp_time)
         else:
             lp_of, lp_time = hit
-        tenant_order = sorted(g.tenants, key=lambda t: (-lp_time[t], t))
+        # weighted priority order: a tenant's claim on the least-loaded
+        # PUs scales with weight * critical-path time (weight 1.0
+        # everywhere == the historical unweighted order)
+        wt = {t: self._tenant_weight(g, t) for t in g.tenants}
+        tenant_order = sorted(g.tenants,
+                              key=lambda t: (-lp_time[t] * wt[t], t))
         lp_set = {n for lp in lp_of.values() for n in lp}
 
         def same_tenant_parallel(a: int, b: int) -> bool:
@@ -112,5 +137,6 @@ class LBLPMTScheduler(Scheduler):
             meta={
                 "longest_paths": {t: lp_of[t] for t in tenant_order},
                 "capacity_spills": spills,
+                "tenant_weights": wt,
             },
         )

@@ -64,7 +64,7 @@ import math
 from typing import Dict, Optional, Sequence, Tuple
 
 from ..cost import CostModel, PUSpec
-from ..graph import Graph, MultiTenantGraph, PUType
+from ..graph import Graph, MultiTenantGraph, Node, PUType
 from .base import Assignment, ScheduleError, Scheduler
 from .lblp import LBLPScheduler
 from .lblp_mt import LBLPMTScheduler
@@ -72,9 +72,129 @@ from .lblp_mt import LBLPMTScheduler
 from ..simcontext import MEMO_CAP as _MEMO_CAP  # shared ctx.memo bound
 
 
-class _ProbeSession:
+def _weights_sig(g: Graph) -> tuple:
+    """Tenant serving weights as a hashable content signature (empty on
+    single-model graphs).  Weight changes do not invalidate graph-level
+    caches by design, so every cache keyed on graph scratch/ctx.memo
+    whose value depends on the fair-queueing interleave must carry it."""
+    if isinstance(g, MultiTenantGraph):
+        return tuple(sorted(g.tenant_weights.items()))
+    return ()
+
+
+def estimated_gain(g: Graph, node: Node, k: int, cm: CostModel,
+                   pus: Sequence[PUSpec], load: Dict[int, float],
+                   in_flight: Optional[int] = None) -> float:
+    """Transfer-aware analytic estimate of the net relative pipeline-
+    interval gain from widening ``node``'s replica group to ``k``.
+
+    Optimistic on the load side, charged on the transfer side:
+
+    * **bound gain** — widening from ``k-1`` to ``k`` replicas frees
+      ``t/(k-1) - t/k`` amortized seconds/frame from the PU holding the
+      probed replica; even under a perfect re-balance the bound cannot
+      drop below the mean load of the node's compatible PU pool
+      (amortized total load is conserved by replication).
+    * **transfer penalty** — the new replica serves ``1/k`` of the
+      frames from a PU its producers and consumers were not placed for,
+      so those frames pay cross-PU hand-offs (inputs + output).
+      Transfers are DMA (they never occupy a PU, hence never move the
+      analytic bound) but they lengthen sojourns, and under a bounded
+      in-flight budget ``B`` Little's law converts added sojourn into
+      interval: the charge is ``xfer / (k * B)`` seconds/frame.
+
+    Returns the net gain as a fraction of the current bound.  A value
+    <= 0 marks a candidate that cannot plausibly pay off — heavy
+    activations around a light node — which lets the greedy loop skip
+    the full probe (inner schedule + load vector) for it.  The estimate
+    prunes, it never accepts: kept candidates still go through the
+    probe, the lexicographic test and the final ``min_gain`` revert, so
+    the lblp-r >= lblp guarantee is untouched.
+    """
+    if k < 2:
+        raise ScheduleError(f"estimated_gain wants a widened group, got k={k}")
+    bound = max(load.values()) if load else 0.0
+    if bound <= 0:
+        return 0.0
+    t = cm.time(node)
+    freed = t / (k - 1) - t / k
+    pool = [p for p in pus if p.pu_type == node.pu_type] or list(pus)
+    pool_ids = {p.pu_id for p in pool}
+    pool_mean = (sum(v for pid, v in load.items() if pid in pool_ids)
+                 / max(len(pool), 1))
+    bound_gain = bound - max(bound - freed, pool_mean)
+    xfer = cm.transfer(node, same_pu=False)
+    for pid_ in g.predecessors(node.node_id):
+        xfer += cm.transfer(g.nodes[pid_], same_pu=False)
+    budget = in_flight if in_flight is not None else len(pus) + 2
+    penalty = xfer / (k * max(budget, 1))
+    return (bound_gain - penalty) / bound
+
+
+def replication_candidates(g: Graph, a: Assignment, load: Dict[int, float],
+                           cm: CostModel, pus: Sequence[PUSpec],
+                           counts: Dict[int, int],
+                           pu: Optional[int] = None,
+                           node_filter=None,
+                           limit: Optional[int] = None,
+                           gain_model: bool = True
+                           ) -> Tuple[list, int]:
+    """Widening candidates ``(base_id, new_count)`` on one PU of the
+    (possibly already replicated) serving graph ``g`` under mapping
+    ``a`` — the selection loop shared by the lblp-r greedy search and
+    the serving-tier autoscaler.
+
+    ``pu`` defaults to the fleet bottleneck (max load, lowest id on
+    ties); ``node_filter`` restricts the scan (e.g. to one tenant's
+    nodes); candidates are ordered heaviest amortized frame-time first
+    (instance-id tie-break, replica instances deduplicated to their
+    group base), capped at the compatible sub-fleet width, and — with
+    ``gain_model`` — pruned by :func:`estimated_gain`; the second
+    return value counts the pruned bases.
+    """
+    if pu is None:
+        pu = max(load, key=lambda p: (load[p], -p))
+    n_by_type = {pt: sum(1 for p in pus if p.pu_type is pt) for pt in PUType}
+    nodes = [g.nodes[nid] for nid, pid in a.mapping.items()
+             if pid == pu and not g.nodes[nid].is_free()]
+    if node_filter is not None:
+        nodes = [n for n in nodes if node_filter(n)]
+    nodes.sort(key=lambda n: (-cm.frame_time(n), n.node_id))
+    out: list = []
+    pruned = 0
+    seen = set()
+    for node in nodes:
+        base = (node.node_id if node.replica_group is None
+                else node.replica_group)
+        if base in seen:
+            continue
+        seen.add(base)
+        k_new = counts.get(base, 1) + 1
+        # wider than the compatible sub-fleet is pure weight waste
+        if k_new > max(n_by_type.get(g.nodes[base].pu_type, 0), 1):
+            continue
+        if gain_model and estimated_gain(g, g.nodes[base], k_new, cm, pus,
+                                         load) <= 0.0:
+            pruned += 1
+            continue
+        out.append((base, k_new))
+        if limit is not None and len(out) >= limit:
+            break
+    return out, pruned
+
+
+class ProbeSession:
     """Replica-variant probe cache for one (base graph, cm, fleet,
-    inner scheduler) combination; see module docstring."""
+    inner scheduler) combination; see module docstring.
+
+    Consumed beyond this module by ``ElasticSession.set_replicas`` and
+    the serving control plane, so the entry shape is API:
+    :meth:`probe` returns a dict with ``"graph"`` (the derived,
+    possibly replicated graph — one shared object per signature),
+    ``"assignment"`` (the inner schedule over it, shared — copy before
+    mutating), ``"load"`` (per-PU amortized load) and ``"vec"`` (the
+    descending-sorted load vector; lexicographically smaller == better
+    balanced)."""
 
     def __init__(self, g: Graph, cm: CostModel, pus: Sequence[PUSpec],
                  inner: Scheduler) -> None:
@@ -106,14 +226,15 @@ class _ProbeSession:
 
     @staticmethod
     def for_graph(g: Graph, cm: CostModel, pus: Sequence[PUSpec],
-                  inner: Scheduler) -> "_ProbeSession":
+                  inner: Scheduler) -> "ProbeSession":
         key = ("lblp-r-probe", type(cm), cm.profile, inner.name,
                getattr(inner, "branch_constraint", None),
+               _weights_sig(g),
                tuple((p.pu_id, p.pu_type, p.speed, p.weight_capacity)
                      for p in pus))
         sess = g.scratch().get(key)
         if sess is None:
-            sess = g.scratch()[key] = _ProbeSession(g, cm, pus, inner)
+            sess = g.scratch()[key] = ProbeSession(g, cm, pus, inner)
         return sess
 
 
@@ -124,13 +245,18 @@ class LBLPRScheduler(Scheduler):
                  replica_budget: Optional[int] = None,
                  min_gain: float = 0.02,
                  validate_rate: Optional[int] = None,
-                 sim_engine: str = "exact") -> None:
+                 sim_engine: str = "exact",
+                 gain_model: bool = True) -> None:
         super().__init__(cost_model)
         self.branch_constraint = branch_constraint
         #: max number of extra replicas to add; None -> fleet size
         self.replica_budget = replica_budget
         #: minimum relative bound improvement to accept the replication
         self.min_gain = min_gain
+        #: prune probe candidates whose transfer-aware analytic gain
+        #: estimate is <= 0 before running the inner schedule for them
+        #: (meta["probes_pruned"] counts the drops)
+        self.gain_model = gain_model
         #: simulate both candidates for this many frames and revert if the
         #: replicated schedule's measured rate regresses (None = bound only)
         self.validate_rate = validate_rate
@@ -159,10 +285,8 @@ class LBLPRScheduler(Scheduler):
         inner = self._inner(g)
         budget = (self.replica_budget if self.replica_budget is not None
                   else len(pus))
-        n_by_type = {pt: sum(1 for p in pus if p.pu_type is pt)
-                     for pt in PUType}
 
-        sess = _ProbeSession.for_graph(g, cm, pus, inner)
+        sess = ProbeSession.for_graph(g, cm, pus, inner)
         counts: Dict[int, int] = {}
         base_e = sess.probe(counts)
         base_a = base_e["assignment"]
@@ -173,21 +297,15 @@ class LBLPRScheduler(Scheduler):
         best_load = base_e["load"]
 
         extra = 0
+        pruned = 0
         while extra < budget:
             load = best_load
-            bottleneck_pu = max(load, key=lambda p: (load[p], -p))
-            cands = [best_g.nodes[nid]
-                     for nid, pid in best_a.mapping.items()
-                     if pid == bottleneck_pu and not best_g.nodes[nid].is_free()]
-            cands.sort(key=lambda n: (-cm.frame_time(n), n.node_id))
+            cands, dropped = replication_candidates(
+                best_g, best_a, load, cm, pus, counts,
+                gain_model=self.gain_model)
+            pruned += dropped
             improved = False
-            for node in cands:
-                base = (node.node_id if node.replica_group is None
-                        else node.replica_group)
-                k_new = counts.get(base, 1) + 1
-                # wider than the compatible sub-fleet is pure weight waste
-                if k_new > max(n_by_type.get(g.nodes[base].pu_type, 0), 1):
-                    continue
+            for base, k_new in cands:
                 try_counts = {**counts, base: k_new}
                 e = sess.probe(try_counts)
                 if e["vec"] < best_vec:
@@ -223,7 +341,8 @@ class LBLPRScheduler(Scheduler):
                   "replicas": dict(counts),
                   "extra_replicas": extra,
                   "replicated_graph": best_g,
-                  "bound_interval": best_bound},
+                  "bound_interval": best_bound,
+                  "probes_pruned": pruned},
         )
 
 
@@ -260,6 +379,7 @@ def measured_rate(g: Graph, a: Assignment, cm: Optional[CostModel],
     key = None
     if memo is not None:
         key = ("measured_rate", type(sim).__name__, sim.mode, frames,
+               _weights_sig(g),
                tuple(sorted(a.mapping.items())),
                tuple((p.pu_id, p.pu_type, p.speed) for p in a.pus))
         hit = memo.get(key)

@@ -167,6 +167,24 @@ _VECTOR_MIN = 192
 _DEBUG_SAMPLES: Optional[list] = None
 
 
+def slo_headroom(rate: float, latency: float,
+                 min_rate: Optional[float] = None,
+                 max_latency: Optional[float] = None) -> float:
+    """Smallest relative margin of attained figures to a promise:
+    positive iff every promised dimension is met (``inf`` when nothing
+    is promised).  Rate margin is ``rate/min_rate - 1``; latency margin
+    is ``1 - latency/max_latency`` — both are signed fractions of the
+    promise, so the min is the binding dimension.  The single source of
+    the formula: :meth:`TenantMetrics.slo_headroom` and
+    ``serving.SLO.headroom`` both delegate here."""
+    h = math.inf
+    if min_rate is not None and min_rate > 0:
+        h = min(h, rate / min_rate - 1.0)
+    if max_latency is not None and max_latency > 0:
+        h = min(h, 1.0 - latency / max_latency)
+    return h
+
+
 @dataclass
 class TenantMetrics:
     """Steady-state figures of one tenant's frame stream (multi-tenant runs)."""
@@ -180,6 +198,17 @@ class TenantMetrics:
     busy: Dict[int, float]              # pu_id -> busy seconds for this tenant
     utilization_share: float            # tenant busy / fleet busy (whole run)
     injected_rate: Optional[float] = None  # requested open-loop rate, if any
+
+    # -- SLO evaluation (consumed by repro.core.serving) -------------------
+    def slo_headroom(self, min_rate: Optional[float] = None,
+                     max_latency: Optional[float] = None) -> float:
+        """Smallest relative margin to the promise — see the
+        module-level :func:`slo_headroom`."""
+        return slo_headroom(self.rate, self.latency, min_rate, max_latency)
+
+    def meets_slo(self, min_rate: Optional[float] = None,
+                  max_latency: Optional[float] = None) -> bool:
+        return self.slo_headroom(min_rate, max_latency) >= 0.0
 
 
 @dataclass
@@ -197,6 +226,21 @@ class SimResult:
     bound_interval: float               # analytic max-load bound
     meta: dict = field(default_factory=dict)
     tenants: Dict[str, TenantMetrics] = field(default_factory=dict)
+
+    # -- SLO evaluation (consumed by repro.core.serving) -------------------
+    def slo_headroom(self, slos: Dict[str, Tuple[Optional[float],
+                                                 Optional[float]]]
+                     ) -> Dict[str, float]:
+        """Per-tenant SLO headroom over a ``tenant -> (min_rate,
+        max_latency)`` promise map (see
+        :meth:`TenantMetrics.slo_headroom`).  Every promised tenant must
+        be present in ``self.tenants``."""
+        return {t: self.tenants[t].slo_headroom(mr, ml)
+                for t, (mr, ml) in slos.items()}
+
+    def meets_slos(self, slos: Dict[str, Tuple[Optional[float],
+                                               Optional[float]]]) -> bool:
+        return all(h >= 0.0 for h in self.slo_headroom(slos).values())
 
 
 @dataclass
@@ -981,12 +1025,18 @@ class IMCESimulator:
                         for p in range(npu)} for s in range(S)},
         )
 
+    def _weights_sig(self) -> Optional[tuple]:
+        """Content signature of the serving-weight knobs the stream
+        weights depend on (None when there are none)."""
+        return None
+
     def _cached_weights(self, a: Assignment) -> Dict[str, float]:
+        sig = self._weights_sig()
         hit = self._wts_cache
-        if hit is not None and hit[0] is a:
+        if hit is not None and hit[0] is a and hit[2] == sig:
             return hit[1]
         wts = self._stream_weights(a)
-        self._wts_cache = (a, wts)
+        self._wts_cache = (a, wts, sig)
         return wts
 
     @staticmethod
@@ -1191,10 +1241,18 @@ class MultiTenantSimulator(IMCESimulator):
         instead of completion counts — a light tenant streams several
         frames per heavy-tenant frame rather than being locked to the
         heavy tenant's pace (which would cap aggregate rate at
-        n_tenants / heaviest-round)."""
+        n_tenants / heaviest-round).
+
+        Per-tenant serving weights (``MultiTenantGraph.tenant_weight``)
+        scale the entitlement: dividing the virtual-time increment by
+        the weight gives a weight-w tenant w times the fleet share of a
+        weight-1 tenant (classic weighted fair queueing).  The default
+        weight of 1.0 reproduces the historical equal-share ordering
+        bit-for-bit."""
         g: MultiTenantGraph = self.g  # type: ignore[assignment]
         tl = self._cached_tenant_load(a)
-        return {t: max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
+        return {t: (max(sum(tl.get(t, {0: 0.0}).values()), 1e-18)
+                    / g.tenant_weight(t))
                 for t in g.tenants}
 
     def _cached_tenant_load(self, a: Assignment):
@@ -1204,6 +1262,20 @@ class MultiTenantSimulator(IMCESimulator):
         tl = a.tenant_load(self.g, self.cm)
         self._tl_cache = (a, tl)
         return tl
+
+    def _run_memo_key(self, assignment: Assignment, frames: int,
+                      rates: Optional[Dict[str, float]] = None
+                      ) -> Optional[tuple]:
+        # tenant serving weights change the fair-queueing interleave
+        # without any structural mutation, so the content key must carry
+        # them (the serving tier re-weights tenants on one union object)
+        g: MultiTenantGraph = self.g  # type: ignore[assignment]
+        base = super()._run_memo_key(assignment, frames, rates)
+        return base + (tuple(g.tenant_weight(t) for t in g.tenants),)
+
+    def _weights_sig(self) -> Optional[tuple]:
+        g: MultiTenantGraph = self.g  # type: ignore[assignment]
+        return tuple(g.tenant_weight(t) for t in g.tenants)
 
     # -- public API -----------------------------------------------------------
     def run(self, assignment: Assignment, frames: int = 64,
